@@ -1,0 +1,84 @@
+"""Roofline report from the dry-run JSONs (deliverable g).
+
+Reads results/dryrun/*.json, prints the per-(arch x shape x mesh) table with
+the three terms, bottleneck, and MODEL_FLOPS/HLO_FLOPS ratio, and nominates
+the three hillclimb cells (worst roofline fraction / most collective-bound /
+most paper-representative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                       "results", "dryrun")
+
+
+def load_cells(pattern="*.json"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            d = json.load(f)
+        d["_file"] = os.path.basename(path)
+        cells.append(d)
+    return cells
+
+
+def fraction_of_roofline(cell) -> float:
+    """useful compute time / bound time: how close the compiled step is to
+    the ideal (pure model-FLOPs at peak) given its dominant bottleneck."""
+    ideal = cell["model_flops"] / cell["chips"] / 197e12
+    bound = cell["roofline"]["bound_s"]
+    return ideal / bound if bound > 0 else 0.0
+
+
+def report(cells=None, out_path=None):
+    cells = cells or load_cells()
+    lines = []
+    hdr = (f"{'arch':<22}{'shape':<13}{'mesh':<12}{'t_comp':>9}{'t_mem':>9}"
+           f"{'t_coll':>9}{'bound':<11}{'MF/HLO':>7}{'roofl%':>7}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for c in cells:
+        if c.get("skipped"):
+            lines.append(f"{c['_file']:<40} SKIPPED: {c['reason'][:60]}")
+            continue
+        r = c["roofline"]
+        fr = fraction_of_roofline(c)
+        mesh = "x".join(str(s) for s in c["mesh"])
+        lines.append(
+            f"{c['arch']:<22}{c['shape']:<13}{mesh:<12}"
+            f"{r['t_compute_s']:>9.2e}{r['t_memory_s']:>9.2e}"
+            f"{r['t_collective_s']:>9.2e}{r['bottleneck']:<11}"
+            f"{min(c['useful_flops_ratio'], 99.0):>7.3f}{100*fr:>6.1f}%")
+    text = "\n".join(lines)
+    print(text)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+    return text
+
+
+def nominate_hillclimb(cells=None):
+    cells = [c for c in (cells or load_cells("*__pod.json"))
+             if not c.get("skipped")]
+    if not cells:
+        return []
+    worst = min(cells, key=fraction_of_roofline)
+    coll = max(cells, key=lambda c: c["roofline"]["t_collective_s"])
+    chords = [c for c in cells if c["kind"] == "chords"]
+    rep = chords[0] if chords else cells[0]
+    picks = []
+    for tag, c in (("worst-roofline", worst), ("most-collective-bound", coll),
+                   ("paper-representative", rep)):
+        picks.append({"why": tag, "arch": c["arch"], "shape": c["shape"],
+                      "fraction": fraction_of_roofline(c),
+                      "bottleneck": c["roofline"]["bottleneck"]})
+    return picks
+
+
+if __name__ == "__main__":
+    report()
+    for p in nominate_hillclimb():
+        print("HILLCLIMB:", p)

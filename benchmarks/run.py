@@ -1,0 +1,27 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; writes results/benchmarks.json.
+Roofline terms (from the compiled dry-run) print at the end when
+results/dryrun/*.json exist (produced by ``python -m repro.launch.dryrun --all``).
+"""
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import tables
+    from benchmarks.roofline import load_cells, nominate_hillclimb, report
+
+    tables.run_all()
+
+    cells = load_cells()
+    if cells:
+        print("\n# Roofline (from dry-run artifacts)")
+        report(cells)
+        for p in nominate_hillclimb():
+            print("HILLCLIMB:", p)
+    else:
+        print("# (no dry-run artifacts; run python -m repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

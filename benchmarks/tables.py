@@ -1,0 +1,185 @@
+"""Paper-table benchmarks (Tables 1-4, Figures 4-5 analogs).
+
+Quality metric is latent RMSE vs the sequential oracle — the paper's
+model-independent metric (VBench/CLIP require the original video/image
+checkpoints, unavailable offline; see DESIGN.md §6). Speedup is the paper's
+"number of sequential network forward calls" ratio.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import (RESULTS_DIR, emit, image_problem, latent_rmse,
+                               micro_dit_problem, time_call, video_problem)
+from repro.core import (chords_sample, make_sequence, paradigms_sample,
+                        select_output, sequential_sample, srds_sample,
+                        uniform_tgrid)
+
+
+def _bench_methods(drift, x0, tg, cores, rel_bar=0.02):
+    """Speedup at matched quality: each method's fastest operating point whose
+    latent RMSE vs the sequential oracle is <= rel_bar * RMS(sequential) —
+    the paper's 'no measurable quality degradation' comparison."""
+    n = int(tg.shape[0]) - 1
+    seq_t, seq = time_call(lambda: sequential_sample(drift, x0, tg))
+    bar = rel_bar * float(np.sqrt(np.mean(np.asarray(seq) ** 2)))
+    rows = [{"method": "sequential", "cores": 1, "rounds": n, "speedup": 1.0,
+             "rmse": 0.0, "wall_s": seq_t}]
+    for k in cores:
+        # ParaDIGMS: loosest tolerance still meeting the bar
+        best = None
+        for tol in (0.3, 0.1, 0.03, 0.01, 3e-3, 1e-3, 3e-4, 1e-4):
+            pr = paradigms_sample(drift, x0, tg, window=k, tol=tol)
+            rmse = latent_rmse(pr.output, seq)
+            if rmse <= bar:
+                best = {"method": "paradigms", "cores": k, "rounds": pr.rounds,
+                        "speedup": pr.speedup, "rmse": rmse, "tol": tol}
+                break
+        rows.append(best or {"method": "paradigms", "cores": k,
+                             "rounds": pr.rounds, "speedup": pr.speedup,
+                             "rmse": rmse, "note": "bar missed"})
+        # SRDS: fewest parareal iterations meeting the bar
+        best = None
+        for iters in range(1, k + 1):
+            sr = srds_sample(drift, x0, tg, num_segments=k, tol=0.0,
+                             max_iters=iters)
+            rmse = latent_rmse(sr.output, seq)
+            if rmse <= bar:
+                best = {"method": "srds", "cores": k, "rounds": sr.rounds,
+                        "speedup": sr.speedup, "rmse": rmse, "iters": iters}
+                break
+        rows.append(best or {"method": "srds", "cores": k, "rounds": sr.rounds,
+                             "speedup": sr.speedup, "rmse": rmse,
+                             "note": "bar missed"})
+        # CHORDS: earliest streamed output meeting the bar
+        res = chords_sample(drift, x0, tg, make_sequence(k, n))
+        chosen = 0
+        for core in range(k - 1, -1, -1):  # arrival order (fastest first)
+            if latent_rmse(res.outputs[core], seq) <= bar:
+                chosen = core
+                break
+        rows.append({"method": "chords", "cores": k,
+                     "rounds": int(res.emit_rounds[chosen]),
+                     "speedup": res.speedup(chosen),
+                     "rmse": latent_rmse(res.outputs[chosen], seq),
+                     "rmse_first": latent_rmse(res.outputs[-1], seq),
+                     "speedup_first": res.speedup(k - 1)})
+    return rows
+
+
+def table1_video(cores=(4, 6, 8)):
+    drift, x0, tg = video_problem()
+    rows = _bench_methods(drift, x0, tg, cores)
+    for r in rows:
+        emit(f"table1_video/{r['method']}_K{r['cores']}", 0.0,
+             f"speedup={r['speedup']:.2f};rmse={r['rmse']:.4f}")
+    return rows
+
+
+def table2_image(cores=(4, 6, 8)):
+    drift, x0, tg = image_problem()
+    rows = _bench_methods(drift, x0, tg, cores)
+    for r in rows:
+        emit(f"table2_image/{r['method']}_K{r['cores']}", 0.0,
+             f"speedup={r['speedup']:.2f};rmse={r['rmse']:.4f}")
+    return rows
+
+
+def table1b_micro_dit(cores=(4, 8)):
+    drift, x0, tg = micro_dit_problem()
+    rows = _bench_methods(drift, x0, tg, cores)
+    for r in rows:
+        emit(f"table1b_dit/{r['method']}_K{r['cores']}", 0.0,
+             f"speedup={r['speedup']:.2f};rmse={r['rmse']:.4f}")
+    return rows
+
+
+def table3_init_ablation(cores=(4, 6, 8)):
+    """Ours vs uniform at the SAME fastest-core slot i_K (same speedup)."""
+    from repro.core import uniform_sequence
+    drift, x0, tg = video_problem()
+    n = int(tg.shape[0]) - 1
+    seq = sequential_sample(drift, x0, tg)
+    rows = []
+    for k in cores:
+        ours = make_sequence(k, n)
+        step = ours[-1] / (k - 1)
+        uni = sorted(set(int(round(j * step)) for j in range(k)))
+        while len(uni) < k:  # de-dup filler
+            uni.append(uni[-1] + 1)
+        for mode, i_seq in (("ours", ours), ("uniform", uni)):
+            res = chords_sample(drift, x0, tg, i_seq)
+            row = {"cores": k, "mode": mode, "i_seq": i_seq,
+                   "speedup": res.speedup(k - 1),
+                   "rmse": latent_rmse(res.outputs[-1], seq)}
+            rows.append(row)
+            emit(f"table3_init/{mode}_K{k}", 0.0,
+                 f"speedup={row['speedup']:.2f};rmse={row['rmse']:.4f}")
+    return rows
+
+
+def table4_steps(steps=(50, 75, 100), k=8):
+    rows = []
+    for n in steps:
+        drift, x0, tg = video_problem(n_steps=n)
+        seq = sequential_sample(drift, x0, tg)
+        res = chords_sample(drift, x0, tg, make_sequence(k, n))
+        row = {"n_steps": n, "speedup": res.speedup(k - 1),
+               "rmse": latent_rmse(res.outputs[-1], seq)}
+        rows.append(row)
+        emit(f"table4_steps/N{n}", 0.0,
+             f"speedup={row['speedup']:.2f};rmse={row['rmse']:.4f}")
+    return rows
+
+
+def fig4_core_scaling(cores=(2, 3, 4, 6, 8, 10, 12)):
+    drift, x0, tg = video_problem()
+    n = int(tg.shape[0]) - 1
+    seq = sequential_sample(drift, x0, tg)
+    rows = []
+    for k in cores:
+        res = chords_sample(drift, x0, tg, make_sequence(k, n))
+        row = {"cores": k, "speedup": res.speedup(k - 1),
+               "rmse": latent_rmse(res.outputs[-1], seq)}
+        rows.append(row)
+        emit(f"fig4_scaling/K{k}", 0.0,
+             f"speedup={row['speedup']:.2f};rmse={row['rmse']:.4f}")
+    return rows
+
+
+def fig5_convergence(k=8):
+    """L1 distance of each streamed output to the final (core-0) output."""
+    drift, x0, tg = video_problem()
+    n = int(tg.shape[0]) - 1
+    rows = []
+    for mode in ("auto", "uniform"):
+        i_seq = make_sequence(k, n, mode)
+        res = chords_sample(drift, x0, tg, i_seq)
+        final = np.asarray(res.outputs[0], np.float64)
+        for core in range(k - 1, -1, -1):
+            l1 = float(np.abs(np.asarray(res.outputs[core], np.float64)
+                              - final).mean())
+            rows.append({"mode": "ours" if mode == "auto" else mode,
+                         "round": int(res.emit_rounds[core]), "l1": l1})
+            emit(f"fig5_convergence/{rows[-1]['mode']}_r{rows[-1]['round']}",
+                 0.0, f"l1={l1:.5f}")
+    return rows
+
+
+def run_all():
+    out = {
+        "table1_video": table1_video(),
+        "table1b_micro_dit": table1b_micro_dit(),
+        "table2_image": table2_image(),
+        "table3_init_ablation": table3_init_ablation(),
+        "table4_steps": table4_steps(),
+        "fig4_core_scaling": fig4_core_scaling(),
+        "fig5_convergence": fig5_convergence(),
+    }
+    import os
+    with open(os.path.join(RESULTS_DIR, "benchmarks.json"), "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    return out

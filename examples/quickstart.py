@@ -1,0 +1,35 @@
+"""Quickstart: accelerate sampling of an exact multimodal diffusion ODE with
+CHORDS and compare against the sequential solver.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import (GaussianMixture, chords_sample, make_sequence,
+                        select_output, sequential_sample, uniform_tgrid)
+
+N_STEPS = 50
+NUM_CORES = 8
+
+# a diffusion model with a closed-form velocity field (no training needed)
+gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=6, dim=16)
+x0 = jax.random.normal(jax.random.PRNGKey(1), (4, 16))  # t=0 noise
+tgrid = uniform_tgrid(N_STEPS, t_max=0.98)
+
+# golden sequential solve (50 network calls)
+seq = sequential_sample(gm.drift, x0, tgrid)
+
+# CHORDS: hierarchical multi-core solve (paper Algorithm 1)
+i_seq = make_sequence(NUM_CORES, N_STEPS)  # paper preset [0,2,4,8,16,24,32,40]
+res = chords_sample(gm.drift, x0, tgrid, i_seq)
+
+print(f"init sequence      : {i_seq}")
+for k in range(NUM_CORES):
+    rmse = float(np.sqrt(((np.asarray(res.outputs[k]) - np.asarray(seq)) ** 2).mean()))
+    print(f"core {k}: arrives at round {res.emit_rounds[k]:>2} "
+          f"(speedup {res.speedup(k):.2f}x)  latent RMSE vs sequential {rmse:.5f}")
+
+core, rounds, speedup = select_output(res, rtol=0.05)
+print(f"\nstreaming early-exit accepts core {core} after {rounds} rounds "
+      f"=> {speedup:.2f}x speedup (paper reports 2.9x at 8 cores)")

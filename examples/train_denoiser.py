@@ -1,0 +1,89 @@
+"""End-to-end training driver: train a DiT-style denoiser (rectified flow)
+with the full substrate — data pipeline, ZeRO AdamW, checkpointing — then
+sample it with CHORDS and report speedup + latent RMSE.
+
+Default is CPU-scale; --layers/--d-model scale it up (the full chords-dit-xl
+config is the production target exercised by the dry-run).
+
+  PYTHONPATH=src python examples/train_denoiser.py --steps 300
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (GaussianMixture, chords_sample, make_sequence,
+                        sequential_sample, uniform_tgrid)
+from repro.diffusion import diffusion_loss, init_wrapper, make_drift
+from repro.dist.checkpoint import CheckpointManager
+from repro.optim import AdamWConfig, apply_updates, init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--latent-dim", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--cores", type=int, default=8)
+    ap.add_argument("--sample-steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("chords-dit-xl", reduced=True)
+    gm = GaussianMixture.random(jax.random.PRNGKey(7), num_modes=4,
+                                dim=args.latent_dim)
+    params = init_wrapper(cfg, args.latent_dim, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] denoiser params: {n_params/1e6:.2f}M")
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps,
+                      weight_decay=0.0)
+    state = init_state(params, opt)
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "chords_denoiser_ckpt")
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+
+    @jax.jit
+    def step(params, state, key):
+        k1, k2 = jax.random.split(key)
+        x1 = gm.sample_data(k1, args.batch * args.seq).reshape(
+            args.batch, args.seq, args.latent_dim)
+        loss, grads = jax.value_and_grad(
+            lambda p: diffusion_loss(p, cfg, x1, k2))(params)
+        params, state, m = apply_updates(params, grads, state, opt)
+        return params, state, loss
+
+    key = jax.random.PRNGKey(1)
+    for i in range(args.steps):
+        key, sub = jax.random.split(key)
+        params, state, loss = step(params, state, sub)
+        if i % 50 == 0 or i == args.steps - 1:
+            print(f"[train] step {i:>4} loss {float(loss):.4f}")
+        if (i + 1) % 100 == 0:
+            ckpt.save({"params": params, "opt": state}, i + 1)
+    ckpt.save({"params": params, "opt": state}, args.steps)
+    print(f"[train] checkpoints in {ckpt_dir}")
+
+    # sample with CHORDS vs sequential
+    drift = make_drift(params, cfg)
+    tg = uniform_tgrid(args.sample_steps, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(3),
+                           (4, args.seq, args.latent_dim))
+    seq = np.asarray(sequential_sample(drift, x0, tg))
+    res = chords_sample(drift, x0, tg,
+                        make_sequence(args.cores, args.sample_steps))
+    rmse = float(np.sqrt(((np.asarray(res.outputs[-1]) - seq) ** 2).mean()))
+    scale = float(np.sqrt((seq ** 2).mean()))
+    print(f"[sample] CHORDS K={args.cores}: speedup "
+          f"{res.speedup(args.cores - 1):.2f}x, latent RMSE {rmse:.4f} "
+          f"(rel {rmse/scale:.3%}) vs sequential N={args.sample_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper-native denoiser configs for CHORDS itself.
+
+The paper runs CHORDS on DiT-class video/image denoisers (HunyuanVideo, Flux).
+We register a DiT-scale dense backbone used (via ``repro.diffusion.wrapper``)
+as the flagship denoiser for the CHORDS dry-run cells, plus a micro variant
+that trains in minutes on CPU for the end-to-end examples.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    # Flux/HunyuanVideo-class latent transformer backbone (non-causal usage).
+    return ModelConfig(
+        name="chords-dit-xl",
+        family="dense",
+        num_layers=36,
+        d_model=3072,
+        num_heads=24,
+        num_kv_heads=24,
+        d_ff=12288,
+        vocab_size=8,  # unused in denoiser role (embeds in/out)
+        embeds_input=True,
+        tie_embeddings=False,
+        source="paper-native (Flux/Hunyuan-class DiT backbone)",
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        name="chords-dit-micro",
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, d_ff=512,
+        param_dtype="float32", compute_dtype="float32",
+    )
+
+
+register("chords-dit-xl", full, reduced)

@@ -1,0 +1,16 @@
+"""CHORDS core: the paper's contribution (multi-core hierarchical ODE solvers)."""
+from repro.core.baselines import BaselineResult, paradigms_sample, srds_sample  # noqa: F401
+from repro.core.chords import ChordsResult, chords_sample, select_output  # noqa: F401
+from repro.core.init_sequence import (  # noqa: F401
+    PAPER_PRESETS,
+    discretize,
+    emit_round,
+    make_sequence,
+    speedup_of,
+    theorem_sequence,
+    uniform_sequence,
+)
+from repro.core.ode import DriftFn, GaussianMixture, exponential_drift, uniform_tgrid  # noqa: F401
+from repro.core.rectify import rectified_step, rectify_delta  # noqa: F401
+from repro.core.reward import reward, speedup_cont  # noqa: F401
+from repro.core.solvers import sequential_sample  # noqa: F401

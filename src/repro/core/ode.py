@@ -1,0 +1,73 @@
+"""PF-ODE abstractions (paper Eq. 2) and analytic drift oracles.
+
+Convention (paper footnote 1): t=0 is noise, t=1 is data; we solve
+``dx = f_theta(x, t) dt`` forward from x_0 ~ N(0, I).
+
+Oracles used for exactly-reproducible validation (no GPU checkpoints exist in
+this container):
+  * ``exponential_drift`` — f(x,t)=x, the paper's own reward surrogate (App. A.2)
+  * ``GaussianMixture``   — closed-form rectified-flow velocity field of a
+    Gaussian-mixture data distribution (exact multimodal denoiser, no training)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# drift: (x, t) -> dx/dt, t scalar (or broadcastable)
+DriftFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def exponential_drift(x, t):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianMixture:
+    """Rectified-flow marginal velocity field for data ~ sum_i w_i N(mu_i, sig_i^2 I).
+
+    x_t = (1-t) eps + t x1  =>  v(x,t) = E[x1 - eps | x_t = x]  (closed form).
+    """
+
+    mus: jax.Array  # [M, D]
+    sigmas: jax.Array  # [M]
+    weights: jax.Array  # [M]
+
+    @staticmethod
+    def random(key, num_modes=8, dim=16, spread=4.0, sigma=0.25):
+        k1, k2 = jax.random.split(key)
+        mus = spread * jax.random.normal(k1, (num_modes, dim))
+        sigmas = sigma * jnp.ones((num_modes,))
+        w = jax.random.dirichlet(k2, jnp.ones((num_modes,)))
+        return GaussianMixture(mus, sigmas, w)
+
+    def drift(self, x, t):
+        """x: [..., D]; t: scalar in [0, 1)."""
+        t = jnp.asarray(t, jnp.float32)
+        d = x.shape[-1]
+        s2 = (1.0 - t) ** 2 + (t * self.sigmas) ** 2  # [M]
+        diff = x[..., None, :] - t * self.mus  # [..., M, D]
+        # log responsibilities
+        logr = (
+            jnp.log(self.weights)
+            - 0.5 * jnp.sum(diff**2, -1) / s2
+            - 0.5 * d * jnp.log(s2)
+        )
+        r = jax.nn.softmax(logr, axis=-1)  # [..., M]
+        coef = (t * self.sigmas**2 - (1.0 - t)) / s2  # [M]
+        v_i = self.mus + coef[:, None] * diff  # [..., M, D]
+        return jnp.sum(r[..., None] * v_i, axis=-2)
+
+    def sample_data(self, key, n):
+        k1, k2, k3 = jax.random.split(key, 3)
+        comp = jax.random.choice(k1, self.mus.shape[0], (n,), p=self.weights)
+        eps = jax.random.normal(k2, (n, self.mus.shape[1]))
+        return self.mus[comp] + self.sigmas[comp][:, None] * eps
+
+
+def uniform_tgrid(n_steps: int, t_max: float = 1.0) -> jax.Array:
+    """t(i) = i/N * t_max (t_max slightly <1 for drifts singular at t=1)."""
+    return jnp.linspace(0.0, t_max, n_steps + 1)

@@ -1,0 +1,33 @@
+"""Inter-core rectification r_theta (paper Eq. 3-4, Proposition 2.1).
+
+    r_theta(x_t, x~_t, t, dt) = dt * (f(x_t, t) - f(x~_t, t)) + x_t - x~_t
+
+Implementation insight (zero extra NFE): both drifts in r_theta are already
+computed by the lockstep rounds — f(x_t, t) is the slow core's *current-round*
+drift, and f(x~_t, t) is the fast core's drift recorded when it passed t
+(``f_prev`` snapshot). So rectification costs only elementwise math + one
+latent transfer, never an extra network call.
+
+``repro.kernels.rectify`` provides the fused Pallas VMEM kernel for the
+combined solver-step + rectification update; this module is the jnp oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rectify_delta(x_slow, f_slow, x_snap, f_snap, dt):
+    """The rectification term r_theta, from precomputed drifts."""
+    return dt * (f_slow - f_snap) + (x_slow - x_snap)
+
+
+def rectified_step(x, f, t, t_next, x_slow, f_slow, x_snap, f_snap, t_snap, fire):
+    """Fused: Delta = (t'-t) f [+ r_theta if fire]; returns (x_new, Delta).
+
+    All of x/f/x_slow/... share the latent shape; t/t_next/t_snap/fire are
+    per-core scalars broadcast over the latent.
+    """
+    delta = (t_next - t) * f
+    rect = rectify_delta(x_slow, f_slow, x_snap, f_snap, t_next - t_snap)
+    delta = jnp.where(fire, delta + rect, delta)
+    return x + delta, delta

@@ -1,0 +1,49 @@
+"""Discrete scheduler (paper Eq. 7) as pure index math.
+
+Lockstep round r (1-based), core k0 (0-based), init sequence i[0..K-1]:
+
+  jump phase  (r <= k0):  cur = i[r-1],            next = i[r]
+  fine phase  (r >  k0):  cur = i[k0] + r - k0 - 1, next = cur + 1
+
+Core k0 performs k0 initialization jumps (paper: "iterating Eq. 6 k-1 times"),
+then unit steps; it emits its output when next == N, i.e. at round
+N - i[k0] + k0, matching the paper's speedup N / (N - i_k + k - 1).
+
+Rectification fires for core k0 at the round where core k0-1's ``cur`` equals
+core k0's snapshot position p (initially i[k0], advanced to ``next`` on every
+fire) — i.e. every i[k0]-i[k0-1] rounds, exactly the cadence of paper Sec. 3
+("core k continues from 2 i_k - i_{k-1} ... every i_k - i_{k-1} steps").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def positions(i_arr, r):
+    """Vectorized Scheduler. i_arr: [K] int32; r: scalar round (1-based).
+
+    Returns (cur, nxt): [K] int32 each.
+    """
+    k0 = jnp.arange(i_arr.shape[0])
+    kmax = i_arr.shape[0] - 1
+    jump = r <= k0
+    cur = jnp.where(jump, i_arr[jnp.minimum(r - 1, kmax)], i_arr + r - k0 - 1)
+    nxt = jnp.where(jump, i_arr[jnp.minimum(r, kmax)], cur + 1)
+    return cur.astype(jnp.int32), nxt.astype(jnp.int32)
+
+
+def positions_np(i_seq, r):
+    """NumPy twin of ``positions`` (for tests / host-side planning)."""
+    i_arr = np.asarray(i_seq)
+    k0 = np.arange(len(i_seq))
+    jump = r <= k0
+    cur = np.where(jump, i_arr[np.minimum(r - 1, len(i_seq) - 1)], i_arr + r - k0 - 1)
+    nxt = np.where(jump, i_arr[np.minimum(r, len(i_seq) - 1)], cur + 1)
+    return cur, nxt
+
+
+def emit_rounds(i_seq, n_steps):
+    """Round (1-based) at which each core emits its output."""
+    k0 = np.arange(len(i_seq))
+    return n_steps - np.asarray(i_seq) + k0

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataPipeline, MemmapSource, SyntheticSource, write_corpus  # noqa: F401

@@ -1,0 +1,9 @@
+from repro.diffusion.schedules import RectifiedFlow, VPCosine  # noqa: F401
+from repro.diffusion.wrapper import (  # noqa: F401
+    denoise,
+    diffusion_loss,
+    init_wrapper,
+    make_drift,
+    time_embedding,
+    wrapper_specs,
+)

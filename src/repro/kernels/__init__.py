@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (validated in interpret mode against ref.py oracles):
+rectify (fused CHORDS update), flash_attention, rmsnorm, ssd_scan."""

@@ -1,0 +1,15 @@
+"""Public attention entry dispatching kernel vs XLA chunked path.
+
+TPU path: ``flash_attention`` Pallas kernel (triangle-skip causal).
+CPU/dry-run path: ``repro.models.layers.attend_chunked`` (same math, XLA).
+"""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attend(q, k, v, causal=True, use_kernel=True, interpret=True, **kw):
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, interpret=interpret, **kw)
+    return attention_ref(q, k, v, causal)

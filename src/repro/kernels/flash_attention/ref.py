@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for causal/bidirectional GQA flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool, scale=None):
+    """q: [B, Sq, H, Dh]; k/v: [B, Sk, KV, Dh]; GQA by head grouping."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, kvh, g, dh).astype(jnp.float32) * scale
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused CHORDS solver-step + rectification.
+
+Six latent-sized operands are combined in ONE VMEM pass
+(x + dt*f + fire*(dsnap*(f_up - f_snap) + x_up - x_snap)), versus ~4 extra HBM
+round-trips of the latent if composed from separate XLA ops. Latents are tiled
+(1 core, BLOCK_M elements) so each tile's working set (6 * BLOCK_M * 4B ~ 3MB
+at the default) fits VMEM; per-core scalars ride along as [K, 1] blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128 * 1024  # elements per tile; 6 operands * 512KB = 3MB VMEM
+
+
+def _kernel(x_ref, f_ref, xu_ref, fu_ref, xs_ref, fs_ref, dt_ref, ds_ref,
+            fire_ref, o_ref):
+    dt = dt_ref[0, 0]
+    ds = ds_ref[0, 0]
+    fire = fire_ref[0, 0]
+    x = x_ref[...]
+    delta = dt * f_ref[...]
+    rect = ds * (fu_ref[...] - fs_ref[...]) + (xu_ref[...] - xs_ref[...])
+    o_ref[...] = x + delta + jnp.where(fire != 0, rect, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fused_step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
+                       block_m: int = BLOCK_M, interpret: bool = True):
+    """x...: [K, M]; dt/dsnap: [K] f32; fire: [K] bool. Returns [K, M]."""
+    k, m = x.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)))
+        x, f, x_up, f_up, x_snap, f_snap = map(
+            padf, (x, f, x_up, f_up, x_snap, f_snap))
+    mp = x.shape[1]
+    grid = (k, mp // bm)
+    lat = pl.BlockSpec((1, bm), lambda i, j: (i, j))
+    scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[lat] * 6 + [scal] * 3,
+        out_specs=lat,
+        out_shape=jax.ShapeDtypeStruct((k, mp), x.dtype),
+        interpret=interpret,
+    )(x, f, x_up, f_up, x_snap, f_snap,
+      dt[:, None].astype(x.dtype), dsnap[:, None].astype(x.dtype),
+      fire[:, None].astype(jnp.int32))
+    return out[:, :m] if pad else out

@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the fused step+rectify kernel.
+
+On TPU targets pass ``interpret=False``; in this CPU container the kernel body
+executes via the Pallas interpreter (bit-accurate vs the TPU lowering for
+this elementwise op).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.rectify.kernel import fused_step_rectify
+from repro.kernels.rectify.ref import fused_step_rectify_ref
+
+
+def step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
+                 use_kernel: bool = True, interpret: bool = True):
+    """Shape-polymorphic entry: latents [K, ...] flattened internally."""
+    k = x.shape[0]
+    shape = x.shape
+    flat = lambda a: a.reshape(k, -1)
+    args = tuple(map(flat, (x, f, x_up, f_up, x_snap, f_snap)))
+    if use_kernel:
+        out = fused_step_rectify(*args, dt, dsnap, fire, interpret=interpret)
+    else:
+        out = fused_step_rectify_ref(*args, dt, dsnap, fire)
+    return out.reshape(shape)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused CHORDS step+rectify update (paper Eq. 3-4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_step_rectify_ref(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire):
+    """Per-core fused update.
+
+    x/f/x_up/f_up/x_snap/f_snap: [K, M] latents+drifts (M = flattened latent).
+    dt, dsnap: [K] step spans; fire: [K] bool rectification trigger.
+    Returns x_new = x + dt*f + fire * (dsnap*(f_up - f_snap) + x_up - x_snap).
+    """
+    delta = dt[:, None] * f
+    rect = dsnap[:, None] * (f_up - f_snap) + (x_up - x_snap)
+    return x + delta + jnp.where(fire[:, None], rect, 0.0)

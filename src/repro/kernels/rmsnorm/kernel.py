@@ -1,0 +1,43 @@
+"""Pallas TPU RMSNorm: one VMEM pass per row tile (vs 2 HBM passes in XLA
+when the mean-square reduction doesn't fuse with the scale)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * w_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, eps: float = 1e-6, block_rows: int = 256, interpret: bool = True):
+    """x: [..., D]; w: [D]."""
+    shape = x.shape
+    d = shape[-1]
+    xf = x.reshape(-1, d)
+    rows = xf.shape[0]
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(xf.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,10 @@
+"""Pure-jnp RMSNorm oracle."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * w.astype(jnp.float32)).astype(dt)

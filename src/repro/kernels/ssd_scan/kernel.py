@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: SSD (Mamba2) intra-chunk block.
+
+Grid = (batch * num_chunks, heads): each program owns one (chunk, head) tile —
+C/B [Lc, N], xdt [Lc, hd], cum [Lc] all resident in VMEM (~460 KB at
+Lc=256, N=64, hd=64), computes the masked decay attention matrix on the MXU
+and the chunk-final state in the same pass. The inter-chunk recurrence stays
+in XLA (tiny [hd, N] state chain).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, b_ref, x_ref, cum_ref, y_ref, s_ref):
+    c = c_ref[...].astype(jnp.float32)  # [Lc, N]
+    b = b_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)  # [Lc, hd]
+    cum = cum_ref[...].astype(jnp.float32)  # [Lc]
+    lc = c.shape[0]
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)
+    dlog = cum[:, None] - cum[None, :]
+    li = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 1)
+    m = jnp.where(li >= mi, jnp.exp(dlog), 0.0)
+    y_ref[...] = jnp.dot(g * m, x, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype)
+    w = jnp.exp(cum[-1] - cum)
+    s_ref[...] = jnp.dot((x * w[:, None]).T, b,
+                         preferred_element_type=jnp.float32).astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(c_mat, b_mat, xdt, cum, interpret: bool = True):
+    """Batched intra-chunk SSD.
+
+    c_mat/b_mat: [G, Lc, N]; xdt: [G, H, Lc, hd]; cum: [G, H, Lc]
+    (G = batch*chunks). Returns (y [G, H, Lc, hd], s_local [G, H, hd, N]).
+    """
+    g_, lc, n = c_mat.shape
+    h, hd = xdt.shape[1], xdt.shape[3]
+    grid = (g_, h)
+    y, s = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, lc, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, lc, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, None, lc, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, lc), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, lc, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, hd, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g_, h, lc, hd), jnp.float32),
+            jax.ShapeDtypeStruct((g_, h, hd, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(c_mat, b_mat, xdt, cum)
+    return y, s

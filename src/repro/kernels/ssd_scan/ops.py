@@ -1,0 +1,2 @@
+from repro.kernels.ssd_scan.kernel import ssd_chunk  # noqa: F401
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SSD intra-chunk block (one chunk, one head)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(c_mat, b_mat, xdt, cum):
+    """One chunk, one (batch, head):
+
+    c_mat/b_mat: [Lc, N] (SSD C and B projections)
+    xdt:         [Lc, hd] (dt-scaled inputs)
+    cum:         [Lc] inclusive cumulative log-decay
+
+    Returns (y_intra [Lc, hd], s_local [hd, N]):
+      y_intra[l] = sum_{m<=l} (C_l . B_m) exp(cum_l - cum_m) xdt_m
+      s_local    = sum_m exp(cum_last - cum_m) xdt_m B_m^T
+    """
+    lc = c_mat.shape[0]
+    g = c_mat @ b_mat.T  # [Lc, Lc]
+    dlog = cum[:, None] - cum[None, :]
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    m = jnp.where(mask, jnp.exp(dlog), 0.0)
+    y = (g * m) @ xdt
+    w = jnp.exp(cum[-1] - cum)  # [Lc]
+    s_local = (xdt * w[:, None]).T @ b_mat  # [hd, N]
+    return y, s_local

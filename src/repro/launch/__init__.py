@@ -1,0 +1,1 @@
+from repro.launch.mesh import dp_size, make_mesh, make_production_mesh  # noqa: F401

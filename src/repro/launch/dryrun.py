@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import (jax locks the device
+# count on first init). Only the dry-run uses 512 placeholder host devices.
+
+# Multi-pod dry-run: lower + compile every (architecture x shape x mesh) cell.
+#
+# For each cell: build the sharded step (train/prefill/decode — or the CHORDS
+# round for the paper-native denoiser cells), jit with explicit shardings,
+# .lower().compile(), then record memory_analysis / cost_analysis /
+# per-device collective bytes to results/dryrun/<cell>.json for the roofline
+# report (benchmarks/roofline.py, EXPERIMENTS.md §Dry-run/§Roofline).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+#   python -m repro.launch.dryrun --arch chords-dit-xl --shape chords_image
+#   python -m repro.launch.dryrun --all [--multi-pod] [--timeout 1800]
+
+import argparse
+import json
+import math
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, ShapeConfig, get_config, shape_applicable
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import SERVE_RULES, TRAIN_RULES, ShardingCtx, use_sharding
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.mesh import dp_size, make_production_mesh
+from repro.models import api as model_api
+from repro.optim.optimizer import AdamWConfig
+from repro.serve.steps import make_decode_step, make_prefill
+from repro.train.train_step import make_train_step
+
+# paper-native CHORDS denoiser cells (see DESIGN.md §7): one lockstep round
+CHORDS_SHAPES = {
+    # (num_cores, batch_per_core, latent_seq, latent_dim)
+    "chords_image": (16, 8, 4096, 64),    # Flux-class 2k image latents
+    "chords_video": (16, 1, 32768, 64),   # Hunyuan-class 720p video latents
+}
+
+DEFAULT_MICROBATCH = {"train_4k": 8}
+
+
+def _tree_shardings(ctx: ShardingCtx, axes_tree, struct_tree=None):
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    if struct_tree is None:
+        return jax.tree_util.tree_map(
+            lambda ax: ctx.sharding(ax), axes_tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_map(
+        lambda ax, st: ctx.sharding(ax, tuple(st.shape)), axes_tree,
+        struct_tree, is_leaf=is_leaf)
+
+
+def _pad_heads(cfg, tp=16):
+    """Pad q/kv head counts up to a multiple of the TP degree (padded wo rows
+    are zero in real deployments, so outputs are unchanged). Keeps attention
+    head-sharded instead of falling back to head_dim-sharding, whose sharded
+    QK^T contraction all-reduces the score tensor every chunk (see §Perf)."""
+    up = lambda x: -(-x // tp) * tp
+    return cfg.replace(num_heads=up(cfg.num_heads),
+                       num_kv_heads=up(cfg.num_kv_heads))
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int,
+               variant: str = ""):
+    cfg = cfg_flops = get_config(arch)
+    if "padheads" in variant:
+        cfg = _pad_heads(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if shape_name in CHORDS_SHAPES:
+        return _build_chords_cell(cfg, shape_name, mesh, cfg_flops=cfg_flops)
+
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"skipped": True, "reason": why}
+
+    rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+    if "fsdplayers" in variant and shape.kind == "train":
+        from repro.dist.sharding import TRAIN_LAYERS_FSDP_RULES
+        rules = TRAIN_LAYERS_FSDP_RULES
+    if "deeptp" in variant and shape.kind == "decode":
+        from repro.dist.sharding import SERVE_DEEP_TP_RULES
+        rules = SERVE_DEEP_TP_RULES
+    ctx = ShardingCtx(mesh, rules)
+    pstructs, paxes = S.model_structs(cfg)
+    p_sh = _tree_shardings(ctx, paxes, pstructs)
+    b_structs = S.batch_specs(cfg, shape)
+    b_sh = _tree_shardings(ctx, S.batch_axes(cfg, shape), b_structs)
+
+    fw = {"attn_impl": "chunked_bf16p" if "bf16p" in variant else "chunked"}
+    if cfg.family == "moe":
+        fw["num_groups"] = dp_size(mesh)
+    if cfg.family == "ssm":
+        fw = {}
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        o_structs, o_axes = S.opt_structs(cfg, opt_cfg)
+        o_sh = _tree_shardings(ctx, o_axes, o_structs)
+        nm = microbatches
+        fn = make_train_step(cfg, opt_cfg, num_microbatches=nm,
+                             **({**fw, "remat": True} if cfg.family != "ssm"
+                                else {"remat": True}))
+        with use_sharding(mesh, rules):
+            jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pstructs, o_structs, b_structs)
+            compiled = lowered.compile()
+        return _analyze(cfg_flops, shape, mesh, compiled, kind="train")
+
+    if shape.kind == "prefill":
+        fn = make_prefill(cfg, shape.seq_len, **fw)
+        args = [pstructs, b_structs["tokens"]]
+        shs = [p_sh, b_sh["tokens"]]
+        if model_api.is_encdec(cfg):
+            args.append(b_structs["src_embeds"])
+            shs.append(b_sh["src_embeds"])
+        with use_sharding(mesh, rules):
+            jitted = jax.jit(fn, in_shardings=tuple(shs))
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+        return _analyze(cfg_flops, shape, mesh, compiled, kind="prefill")
+
+    # decode
+    c_structs, c_axes = S.cache_structs(cfg, shape)
+    c_sh = _tree_shardings(ctx, c_axes, c_structs)
+    fw.pop("attn_impl", None)
+    fn = make_decode_step(cfg, **fw)
+    with use_sharding(mesh, rules):
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh["tokens"], c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+        lowered = jitted.lower(pstructs, b_structs["tokens"], c_structs)
+        compiled = lowered.compile()
+    return _analyze(cfg_flops, shape, mesh, compiled, kind="decode")
+
+
+def _build_chords_cell(cfg: ModelConfig, shape_name: str, mesh, cfg_flops=None):
+    """One CHORDS lockstep round on the production mesh: the paper's technique.
+
+    Cores ride the 'data' axis; the latent roll between adjacent cores lowers
+    to a CollectivePermute; each core's denoiser is TP over 'model'.
+    """
+    from repro.core.chords import chords_init_carry, make_round_body
+    from repro.core.ode import uniform_tgrid
+    from repro.diffusion.wrapper import make_drift, wrapper_specs
+    from repro.utils import pspec
+
+    k, b, s, ld = CHORDS_SHAPES[shape_name]
+    n_steps = 50
+    rules = dict(SERVE_RULES)
+    ctx = ShardingCtx(mesh, rules)
+    wspecs = wrapper_specs(cfg, ld)
+    pstructs = pspec.param_structs(wspecs, jnp.bfloat16)
+    p_sh = _tree_shardings(ctx, pspec.logical_axes(wspecs), pstructs)
+    tgrid = uniform_tgrid(n_steps)
+    i_arr = jnp.asarray([0, 2, 4, 8, 16, 24, 32, 40] + list(
+        range(41, 41 + max(0, k - 8))), jnp.int32)[:k]
+
+    lat_sh = ctx.sharding(("cores", "batch", "seq", None), (k, b, s, ld))
+    snap_sh = lat_sh
+    carry_structs = (
+        jax.ShapeDtypeStruct((k, b, s, ld), jnp.float32),
+    ) * 3 + (jax.ShapeDtypeStruct((k,), jnp.int32),) + (
+        jax.ShapeDtypeStruct((k, b, s, ld), jnp.float32),)
+    carry_sh = (lat_sh, snap_sh, snap_sh, None, lat_sh)
+
+    def round_fn(params, carry, r):
+        drift = make_drift(params, cfg, attn_impl="chunked")
+        body = make_round_body(drift, tgrid, i_arr, n_steps, k)
+        new_carry, _ = body(carry, r)
+        return new_carry
+
+    # NOTE (§Perf iteration C2): the drift runs under vmap over the cores
+    # axis; interior shard_act constraints are rank-blind to that axis and
+    # conflicted with the cores->data carry sharding, forcing whole-latent
+    # all-gathers every layer (confirmed 28.5s -> 0.x s collective term).
+    # The CHORDS round therefore relies on propagation from carry + param
+    # shardings only (no use_sharding context).
+    jitted = jax.jit(round_fn, in_shardings=(p_sh, carry_sh, None),
+                     out_shardings=carry_sh, donate_argnums=(1,))
+    lowered = jitted.lower(pstructs, carry_structs,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+    compiled = lowered.compile()
+
+    fake_shape = ShapeConfig(shape_name, s, k * b, "chords")
+    return _analyze(cfg, fake_shape, mesh, compiled, kind="chords",
+                    extra={"num_cores": k, "latent_dim": ld})
+
+
+def _n_eff_params(cfg: ModelConfig) -> float:
+    """FLOP-relevant params: active experts only; embedding lookup excluded."""
+    total = model_api.param_count(cfg)
+    if cfg.family == "moe":
+        total -= cfg.num_layers * (cfg.num_experts - cfg.experts_per_tok) \
+            * 3 * cfg.d_model * cfg.d_ff
+    if not cfg.tie_embeddings:
+        total -= cfg.vocab_size * cfg.d_model  # lookup table (unembed stays)
+    return float(total)
+
+
+def _model_flops(cfg: ModelConfig, shape: ShapeConfig, kind: str) -> float:
+    n = _n_eff_params(cfg)
+    toks = shape.global_batch * (1 if kind == "decode" else shape.seq_len)
+    if kind == "train":
+        return 6.0 * n * toks
+    if kind == "chords":
+        return 2.0 * n * toks  # one drift eval per core per round
+    return 2.0 * n * toks
+
+
+def _analyze(cfg, shape, mesh, compiled, kind: str, extra=None) -> dict:
+    chips = math.prod(mesh.devices.shape)
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = str(e)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch.hlo_analysis import dot_flops, hbm_bytes_estimate
+    flops_w = dot_flops(hlo)  # loop-weighted (XLA cost_analysis misses
+    bytes_w = hbm_bytes_estimate(hlo)  # nested-while trip counts)
+    terms = roofline_terms(flops_w, bytes_w, coll["total"])
+    mf = _model_flops(cfg, shape, kind)
+    out = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": kind,
+        "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.axis_names),
+        "chips": chips,
+        "per_device": {"flops": flops_w, "hbm_bytes": bytes_w,
+                       "xla_cost_flops": flops_dev, "xla_cost_bytes": bytes_dev,
+                       "collective_bytes": coll},
+        "global_flops": flops_w * chips,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(1.0, flops_w * chips),
+        "roofline": terms,
+        "memory_analysis": mem,
+        "hlo_bytes": len(hlo),
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+ALL_CELLS = [(a, s) for a in ASSIGNED_ARCHS for s in
+             ("train_4k", "prefill_32k", "decode_32k", "long_500k")] + [
+    ("chords-dit-xl", "chords_image"), ("chords-dit-xl", "chords_video")]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch, shape in ALL_CELLS:
+            for mp in ([False, True] if not args.multi_pod else [True]):
+                suffix = "multipod" if mp else "pod"
+                name = f"{arch}__{shape}__{suffix}"
+                path = os.path.join(args.out, name + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] cached {name}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--out", args.out]
+                if mp:
+                    cmd.append("--multi-pod")
+                print(f"[dryrun] {name} ...", flush=True)
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=args.timeout)
+                if r.returncode != 0:
+                    failures.append(name)
+                    print(f"[dryrun] FAIL {name}\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+                else:
+                    print(f"[dryrun] ok {name} ({time.time()-t0:.0f}s)")
+        print(f"[dryrun] done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    mb = args.microbatches or DEFAULT_MICROBATCH.get(args.shape, 1)
+    t0 = time.time()
+    res = build_cell(args.arch, args.shape, args.multi_pod, mb,
+                     variant=args.tag)
+    res["compile_wall_s"] = time.time() - t0
+    res["microbatches"] = mb
+    suffix = ("multipod" if args.multi_pod else "pod") + (args.tag or "")
+    name = f"{args.arch}__{args.shape}__{suffix}"
+    path = os.path.join(args.out, name + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    if res.get("skipped"):
+        print(f"[dryrun] SKIP {name}: {res['reason']}")
+        return
+    print(f"[dryrun] {name}: compile {res['compile_wall_s']:.0f}s")
+    print("  memory_analysis:", res["memory_analysis"])
+    print("  cost_analysis: flops/dev=%.3e hbm/dev=%.3e" % (
+        res["per_device"]["flops"], res["per_device"]["hbm_bytes"]))
+    print("  collectives/dev: %.3e B (%d ops)" % (
+        res["per_device"]["collective_bytes"]["total"],
+        res["per_device"]["collective_bytes"]["num_ops"]))
+    print("  roofline:", {k: (f"{v:.2e}" if isinstance(v, float) else v)
+                          for k, v in res["roofline"].items()})
+    print("  useful_flops_ratio: %.3f" % res["useful_flops_ratio"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Post-compile HLO analysis: collective bytes, op census, roofline terms.
+
+``collective_bytes`` parses the SPMD-partitioned optimized HLO: shapes there
+are PER-DEVICE, so summed byte counts are per-device wire traffic. all-reduce
+counts 2x (ring reduce-scatter + all-gather phases); async start/done pairs
+count once (on start).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shapes>.*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start|-done)?\(", re.M)
+
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES.get(dt, 4)
+    return total
+
+
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIPC_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Map computation name -> body text (line-start headers ending in '{')."""
+    comps: Dict[str, str] = {}
+    name, buf, depth = None, [], 0
+    for ln in hlo_text.splitlines():
+        stripped = ln.rstrip()
+        if name is None:
+            if (stripped.endswith("{") and "->" in stripped
+                    and (stripped.startswith("%") or stripped.startswith("ENTRY"))):
+                tok = stripped.split()[1] if stripped.startswith("ENTRY") \
+                    else stripped.split()[0]
+                name = tok.lstrip("%").split("(")[0].rstrip(",")
+                buf, depth = [ln], 1
+        else:
+            buf.append(ln)
+            depth += stripped.count("{") - stripped.count("}")
+            if depth <= 0:
+                comps[name] = "\n".join(buf)
+                name = None
+    return comps
+
+
+def _loop_weights(hlo_text: str, comps: Dict[str, str]) -> Dict[str, float]:
+    """Execution multiplier per computation from while known_trip_count
+    (XLA annotates scan/fori loops), propagated through nesting + fusion calls."""
+    weights = {n: 1.0 for n in comps}
+    edges = []
+    for parent, text in comps.items():
+        for ln in text.splitlines():
+            if " while(" in ln:
+                bm = _BODY_RE.search(ln)
+                tm = _TRIPC_RE.search(ln)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    edges.append((parent, bm.group(1), trip))
+                cm = _COND_RE.search(ln)
+                if cm:
+                    edges.append((parent, cm.group(1), trip))
+            else:
+                for cm in _CALLS_RE.finditer(ln):
+                    edges.append((parent, cm.group(1), 1))
+    for _ in range(12):  # propagate to fixpoint (nesting depth bounded)
+        changed = False
+        for parent, child, trip in edges:
+            if child in weights:
+                w = weights.get(parent, 1.0) * max(1, trip)
+                if w > weights[child]:
+                    weights[child] = w
+                    changed = True
+        if not changed:
+            break
+    return weights
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective wire bytes by op type (+ 'total'),
+    loop-trip-count weighted (collectives inside scan bodies count x trips)."""
+    comps = _split_computations(hlo_text)
+    weights = _loop_weights(hlo_text, comps)
+    out: Dict[str, float] = {k: 0.0 for k in _MULT}
+    count = 0
+    items = comps.items() if comps else [("__entry__", hlo_text)]
+    for cname, text in items:
+        w = weights.get(cname, 1.0)
+        for m in _COLL_RE.finditer(text):
+            if m.group("async") == "-done":
+                continue  # counted at -start
+            op = m.group("op")
+            b = _shape_bytes(m.group("shapes"))
+            out[op] += b * _MULT[op] * w
+            count += 1
+    out["total"] = sum(out[k] for k in _MULT)
+    out["num_ops"] = count
+    return out
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[\w\[\],\s{}]+?)\s+[\w\-]+\(")
+_DOT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<res>\S+)\s+dot\(%?(?P<lhs>[\w.\-]+),"
+    r".*?lhs_contracting_dims=\{(?P<cd>[\d,]*)\}", re.M)
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "while(", "conditional(", "iota(", "after-all(", "bitcast(",
+             "partition-id(", "replica-id(")
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d] or [1]
+
+
+def dot_flops(hlo_text: str) -> float:
+    """Loop-weighted per-device matmul FLOPs (2*M*N*K per dot).
+
+    XLA's HloCostAnalysis does not consistently scale nested while bodies by
+    their trip counts, so we count dots ourselves with the same loop-weight
+    machinery used for collectives. Elementwise FLOPs are excluded (<2% for
+    these models); convolutions are implemented as shift-multiplies upstream.
+    """
+    comps = _split_computations(hlo_text)
+    weights = _loop_weights(hlo_text, comps)
+    total = 0.0
+    items = comps.items() if comps else [("__entry__", hlo_text)]
+    for cname, text in items:
+        w = weights.get(cname, 1.0)
+        shapes = {}
+        for ln in text.splitlines():
+            dm = _DEF_RE.match(ln)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+        for m in _DOT_RE.finditer(text):
+            res_dims = _shape_dims(m.group("res"))
+            if res_dims is None:
+                continue
+            k = 1
+            lhs_shape = shapes.get(m.group("lhs"))
+            if lhs_shape:
+                dims = _shape_dims(lhs_shape) or []
+                for ci in (int(c) for c in m.group("cd").split(",") if c):
+                    if ci < len(dims):
+                        k *= dims[ci]
+            total += 2.0 * k * float(_prod(res_dims)) * w
+    return total
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def hbm_bytes_estimate(hlo_text: str) -> float:
+    """Loop-weighted HBM traffic estimate: 2x (write+read) each op's result
+    bytes, skipping shape-only ops. Order-of-magnitude estimator — fusion
+    internals stay in registers/VMEM, repeated reads undercounted; reported
+    alongside XLA's (unweighted) 'bytes accessed' for cross-checking."""
+    comps = _split_computations(hlo_text)
+    weights = _loop_weights(hlo_text, comps)
+    total = 0.0
+    items = comps.items() if comps else [("__entry__", hlo_text)]
+    for cname, text in items:
+        w = weights.get(cname, 1.0)
+        if cname.startswith(("fused_computation", "wrapped_", "region_")):
+            continue  # internals of fusions don't touch HBM per-op
+        for ln in text.splitlines():
+            s = ln.strip()
+            if not s or "=" not in s or any(op in s for op in _SKIP_OPS):
+                continue
+            dm = _DEF_RE.match(ln)
+            if dm:
+                total += 2.0 * _shape_bytes(dm.group(2)) * w
+    return total
+
+
+# TPU v5e constants (assignment-provided)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float) -> dict:
+    """Three roofline terms in seconds (per the assignment formulas, with
+    per-device quantities: global/(chips*peak) == per_device/peak)."""
+    t_compute = per_device_flops / PEAK_FLOPS
+    t_memory = per_device_bytes / HBM_BW
+    t_coll = per_device_coll_bytes / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": dom[0],
+        "bound_s": dom[1],
+    }

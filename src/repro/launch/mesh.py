@@ -1,0 +1,47 @@
+"""Production meshes. Importing this module never touches jax device state."""
+from __future__ import annotations
+
+import math
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=(data,model) single pod (256 chips) or (2,16,16)=(pod,data,model).
+
+    The pod axis carries only gradient reduce-scatters (training) / replica
+    traffic (serving) — no per-layer activation collectives cross pods.
+    """
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devices)} "
+            "(dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    import numpy as np
+
+    dev = np.asarray(devices[:need]).reshape(shape)
+    from jax.sharding import Mesh
+
+    return Mesh(dev, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh from the first prod(shape) devices (tests, elastic)."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    need = math.prod(shape)
+    dev = np.asarray(jax.devices()[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def dp_size(mesh) -> int:
+    """Total data-parallel ways (pod x data)."""
+    s = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        s *= mesh.shape["pod"]
+    return s

@@ -1,0 +1,79 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+Weak-type-correct, shardable, zero allocation. Modality frontends ([audio],
+[vlm]) are stubs per the assignment: the specs provide precomputed frame /
+patch embeddings instead of raw media.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api as model_api
+from repro.optim.optimizer import AdamWConfig, state_axes, state_structs
+from repro.utils import pspec
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if model_api.is_encdec(cfg):
+            out["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, s // cfg.src_ratio, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if model_api.is_encdec(cfg):
+            out["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, s // cfg.src_ratio, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        if model_api.is_encdec(cfg):
+            out["src_embeds"] = ("batch", "seq", "embed_act")
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": ("batch", "seq")}
+        if model_api.is_encdec(cfg):
+            out["src_embeds"] = ("batch", "seq", "embed_act")
+        return out
+    return {"tokens": ("batch", None)}
+
+
+def model_structs(cfg: ModelConfig):
+    specs = model_api.model_specs(cfg)
+    return (pspec.param_structs(specs, jnp.dtype(cfg.param_dtype)),
+            pspec.logical_axes(specs))
+
+
+def opt_structs(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    specs = model_api.model_specs(cfg)
+    ps = pspec.param_structs(specs, jnp.dtype(cfg.param_dtype))
+    ax = pspec.logical_axes(specs)
+    return state_structs(ps, opt_cfg), state_axes(ax, opt_cfg)
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig):
+    mod = model_api.get_module(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        return mod.cache_specs(cfg, b), mod.cache_axes(cfg)
+    return mod.cache_specs(cfg, b, s), mod.cache_axes(cfg)
+
+
+def chords_latent_specs(cfg: ModelConfig, num_cores: int, batch: int, seq: int,
+                        latent_dim: int):
+    """Latent stack for the CHORDS serve_step dry-run ([K, B, S, L])."""
+    return jax.ShapeDtypeStruct((num_cores, batch, seq, latent_dim), jnp.float32)

@@ -1,0 +1,99 @@
+"""Distributed training launcher.
+
+Builds the sharded train step for (arch, mesh), wires the data pipeline,
+checkpoint manager, heartbeat monitor and elastic re-mesh handler, and runs
+the loop. On this CPU container use --reduced + a tiny mesh; on a real
+cluster the same script runs under multihost jax.distributed.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataPipeline
+from repro.dist.fault_tolerance import HeartbeatMonitor, plan_elastic_mesh
+from repro.dist.sharding import TRAIN_RULES, ShardingCtx, use_sharding
+from repro.models import api as model_api
+from repro.optim import AdamWConfig, init_state
+from repro.train import TrainLoopConfig, train_loop
+from repro.train.train_step import make_train_step
+from repro.utils import pspec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="", help="e.g. 2x2 => (data=2, model=2)")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    key = jax.random.PRNGKey(0)
+    params = model_api.init_model(cfg, key)
+    print(f"[train] {cfg.name}: {model_api.param_count(cfg)/1e6:.2f}M params")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          compress_grads=args.compress_grads)
+    pipe = DataPipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    fw = {"remat": True}
+    if cfg.family == "moe":
+        fw["num_groups"] = 1
+    if cfg.family == "ssm":
+        fw = {"remat": True}
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+        ctx = ShardingCtx(mesh, TRAIN_RULES)
+        specs = model_api.model_specs(cfg)
+        p_sh = jax.tree_util.tree_map(
+            lambda ax: ctx.sharding(ax), pspec.logical_axes(specs),
+            is_leaf=lambda x: isinstance(x, tuple))
+        params = jax.device_put(params, p_sh)
+        if cfg.family == "moe":
+            fw["num_groups"] = d
+
+    step_fn = make_train_step(cfg, opt_cfg, num_microbatches=args.microbatches,
+                              **fw)
+    monitor = HeartbeatMonitor(num_workers=1)
+
+    def run():
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        loop_cfg = TrainLoopConfig(total_steps=args.steps,
+                                   ckpt_every=args.ckpt_every,
+                                   ckpt_dir=args.ckpt_dir)
+        if mesh is not None:
+            with use_sharding(mesh, TRAIN_RULES):
+                return train_loop(cfg, params, pipe, opt_cfg, loop_cfg,
+                                  train_step=jitted, monitor=monitor)
+        return train_loop(cfg, params, pipe, opt_cfg, loop_cfg,
+                          train_step=jitted, monitor=monitor)
+
+    _, _, history = run()
+    if history:
+        print(f"[train] final loss {history[-1]['loss']:.4f} "
+              f"(start {history[0]['loss']:.4f})")
+    stragglers = monitor.stragglers()
+    if stragglers:
+        plan = plan_elastic_mesh(total_hosts=1, dead_hosts=0)
+        print(f"[train] stragglers {stragglers}; elastic plan: {plan}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.api import (  # noqa: F401
+    forward_hidden,
+    get_module,
+    init_model,
+    is_encdec,
+    lm_loss,
+    model_specs,
+    param_count,
+)

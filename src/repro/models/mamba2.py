@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) layer: chunked parallel scan for train/prefill, O(1) decode.
+
+State-space duality form (Dao & Gu 2024) adapted for TPU:
+  * depthwise causal conv implemented as w shifted multiplies (layout-friendly)
+  * intra-chunk term = masked [Lc, Lc] einsum per head (MXU-shaped)
+  * inter-chunk recurrence = lax.scan over chunks carrying [B, H, hd, N] state
+The Pallas kernel in ``repro.kernels.ssd_scan`` implements the intra-chunk
+block; this module is the XLA reference path used by dry-run and CPU tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.utils.pspec import spec
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def num_ssm_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def ssd_specs(cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    d, din, n, h, w = (cfg.d_model, d_inner(cfg), cfg.ssm_state, num_ssm_heads(cfg),
+                       cfg.ssm_conv)
+    conv_ch = din + 2 * n
+    Ld = () if layers is None else (layers,)
+    La = () if layers is None else ("layers",)
+
+    def s(shape, axes, **kw):
+        return spec(Ld + tuple(shape), La + tuple(axes), **kw)
+
+    return {
+        "in_proj": s((d, 2 * din + 2 * n + h), ("embed", "ffn")),
+        "conv_w": s((w, conv_ch), ("conv", "ffn"), init="normal", scale=0.5),
+        "a_log": s((h,), ("heads",), init="zeros"),
+        "d_skip": s((h,), ("heads",), init="ones"),
+        "dt_bias": s((h,), ("heads",), init="zeros"),
+        "gate_norm": s((din,), ("ffn",), init="ones"),
+        "out_proj": s((din, d), ("ffn", "embed")),
+    }
+
+
+def _depthwise_causal_conv(x, w, state=None):
+    """x: [B, S, C]; w: [W, C]. Returns (y [B,S,C], new_state [B, W-1, C])."""
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], wlen - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # [B, S+W-1, C]
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(wlen)
+    )
+    new_state = xp[:, xp.shape[1] - (wlen - 1):, :]
+    return y, new_state
+
+
+def _split(cfg, proj):
+    din, n, h = d_inner(cfg), cfg.ssm_state, num_ssm_heads(cfg)
+    z = proj[..., :din]
+    xc = proj[..., din : 2 * din]
+    b_ = proj[..., 2 * din : 2 * din + n]
+    c_ = proj[..., 2 * din + n : 2 * din + 2 * n]
+    dt = proj[..., 2 * din + 2 * n :]
+    return z, xc, b_, c_, dt
+
+
+def _gated_norm(y, z, w, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    dt_ = y.dtype
+    y = y.astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt_)
+
+
+def ssd_forward(p, cfg: ModelConfig, x, conv_state=None, ssm_state=None):
+    """Chunked SSD. x: [B, S, D] -> (y [B, S, D], (conv_state, ssm_state))."""
+    bsz, s, _ = x.shape
+    din, n, h, hd = d_inner(cfg), cfg.ssm_state, num_ssm_heads(cfg), cfg.ssm_head_dim
+    lc = min(cfg.ssm_chunk, s)
+    assert s % lc == 0, (s, lc)
+    nc = s // lc
+
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xc, b_, c_, dt = _split(cfg, proj)
+    conv_in = jnp.concatenate([xc, b_, c_], axis=-1)
+    conv_out, new_conv = _depthwise_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                                conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :din]
+    b_ = conv_out[..., din : din + n]
+    c_ = conv_out[..., din + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+    loga = dt * a[None, None, :]  # [B, S, H]  (log decay, <= 0)
+
+    xh = xc.reshape(bsz, nc, lc, h, hd)
+    bh = b_.reshape(bsz, nc, lc, n).astype(jnp.float32)
+    ch = c_.reshape(bsz, nc, lc, n).astype(jnp.float32)
+    dth = dt.reshape(bsz, nc, lc, h)
+    logc = loga.reshape(bsz, nc, lc, h)
+    xh = shard_act(xh, ("batch", None, None, "heads", None))
+
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+    init = (jnp.zeros((bsz, h, hd, n), jnp.float32) if ssm_state is None
+            else ssm_state.astype(jnp.float32))
+
+    def body(carry, inp):
+        # carry: inter-chunk state [B,H,hd,N]; one chunk's tensors:
+        xh_c, bh_c, ch_c, dth_c, logc_c = inp
+        cum = jnp.cumsum(logc_c, axis=1)  # [B,Lc,H]
+        total = cum[:, -1, :]  # [B,H]
+        xdt = xh_c.astype(jnp.float32) * dth_c[..., None]  # [B,Lc,H,hd]
+        # intra-chunk: G[l,m] = C_l . B_m ; M[h,l,m] = exp(cum_l - cum_m), m<=l
+        g = jnp.einsum("bln,bmn->blm", ch_c, bh_c)
+        dlog = cum[:, :, None, :] - cum[:, None, :, :]  # [B,Lc(l),Lc(m),H]
+        mexp = jnp.where(mask[None, :, :, None], jnp.exp(dlog), 0.0)
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", g, mexp, xdt)
+        # inter-chunk contribution from the carried state
+        y_inter = jnp.einsum("blh,bln,bhpn->blhp", jnp.exp(cum), ch_c, carry)
+        # chunk-local state + recurrence
+        w_local = jnp.exp(total[:, None, :] - cum)  # [B,Lc,H]
+        s_local = jnp.einsum("bmh,bmhp,bmn->bhpn", w_local, xdt, bh_c)
+        new = jnp.exp(total)[:, :, None, None] * carry + s_local
+        return new, (y_intra + y_inter).astype(x.dtype)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, bh, ch, dth, logc))
+    final_state, y = jax.lax.scan(body, init, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, h, hd).astype(jnp.float32)
+    y = y + xh.reshape(bsz, s, h, hd).astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, s, din).astype(x.dtype)
+    y = _gated_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_conv, final_state.astype(jnp.float32))
+
+
+def ssd_decode_step(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """x: [B, 1, D]; O(1) recurrent update. Returns (y, (conv_state, ssm_state))."""
+    bsz = x.shape[0]
+    din, n, h, hd = d_inner(cfg), cfg.ssm_state, num_ssm_heads(cfg), cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(x.dtype))
+    z, xc, b_, c_, dt = _split(cfg, proj)
+    conv_in = jnp.concatenate([xc, b_, c_], axis=-1)  # [B,1,C]
+    conv_out, new_conv = _depthwise_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                                conv_state)
+    conv_out = jax.nn.silu(conv_out)[:, 0]  # [B, C]
+    xc = conv_out[..., :din].reshape(bsz, h, hd)
+    b_ = conv_out[..., din : din + n].astype(jnp.float32)
+    c_ = conv_out[..., din + n :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])  # [B,H]
+
+    xdt = xc.astype(jnp.float32) * dt[..., None]  # [B,H,hd]
+    new_state = decay[:, :, None, None] * ssm_state + jnp.einsum("bhp,bn->bhpn", xdt, b_)
+    y = jnp.einsum("bn,bhpn->bhp", c_, new_state)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, din).astype(x.dtype)
+    y = _gated_norm(y, z, p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_conv, new_state)
+
+
+def ssd_state_specs(cfg: ModelConfig, batch, layers: int, dtype=jnp.float32):
+    din, n, h, hd, w = (d_inner(cfg), cfg.ssm_state, num_ssm_heads(cfg),
+                        cfg.ssm_head_dim, cfg.ssm_conv)
+    return {
+        "conv": jax.ShapeDtypeStruct((layers, batch, w - 1, din + 2 * n), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((layers, batch, h, hd, n), dtype),
+    }
+
+
+def ssd_state_axes():
+    return {
+        "conv": ("layers", "batch", "conv", "ffn"),
+        "ssm": ("layers", "batch", "heads", None, "state"),
+    }
+
+
+def ssd_init_state(cfg: ModelConfig, batch, layers: int, dtype=jnp.float32):
+    s = ssd_state_specs(cfg, batch, layers, dtype)
+    return jax.tree_util.tree_map(lambda t: jnp.zeros(t.shape, t.dtype), s)

@@ -1,0 +1,229 @@
+"""Mixture-of-Experts transformer (qwen2-moe-a2.7b, olmoe-1b-7b).
+
+MoE layer uses a sort-based dropping dispatch (MaxText-style "permute"):
+tokens are routed top-k, sorted by expert id *within expander groups* (one
+group per data shard so routing never crosses the DP axis), packed into
+[groups, experts, capacity, d] buffers and processed with batched expert
+einsums sharded experts->"model". Overflowing tokens are dropped (capacity
+factor config). This keeps compiled FLOPs ~ active-expert FLOPs instead of
+the dense E/k-times overcompute.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import layers as L
+from repro.utils.pspec import spec
+
+
+def moe_specs(cfg: ModelConfig, layers: Optional[int] = None) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    Ld = () if layers is None else (layers,)
+    La = () if layers is None else ("layers",)
+
+    def s(shape, axes, **kw):
+        return spec(Ld + tuple(shape), La + tuple(axes), **kw)
+
+    specs = {
+        "router": s((d, e), ("embed", "experts")),
+        "w_gate": s((e, d, f), ("experts", "embed", "ffn")),
+        "w_up": s((e, d, f), ("experts", "embed", "ffn")),
+        "w_down": s((e, f, d), ("experts", "ffn", "embed")),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff * cfg.num_shared_experts
+        specs["shared"] = {
+            "w_gate": s((d, fs), ("embed", "ffn")),
+            "w_up": s((d, fs), ("embed", "ffn")),
+            "w_down": s((fs, d), ("ffn", "embed")),
+            "gate": s((d, 1), ("embed", None)),
+        }
+    return specs
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(tokens_per_group * cfg.experts_per_tok * cfg.moe_capacity_factor
+            / cfg.num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def moe_ffn(p, cfg: ModelConfig, x, num_groups: int = 1):
+    """x: [B, S, D] -> [B, S, D]. num_groups should equal the DP shard count."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    t = b * s
+    assert t % num_groups == 0, (t, num_groups)
+    tg = t // num_groups
+    cap = _capacity(tg, cfg)
+    xg = x.reshape(num_groups, tg, d)
+    xg = shard_act(xg, ("groups", None, "embed_act"))
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # [G, Tg, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    def route_one(xg1, top_e1, top_p1):
+        # xg1: [Tg, D]; top_e1/top_p1: [Tg, k]
+        flat_e = top_e1.reshape(-1)  # [Tg*k]
+        flat_t = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+        flat_p = top_p1.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+        # rank within expert = index - first index of this expert id
+        first = jnp.searchsorted(se, se, side="left")
+        rank = jnp.arange(se.shape[0], dtype=jnp.int32) - first.astype(jnp.int32)
+        keep = rank < cap
+        dest = jnp.where(keep, se * cap + rank, e * cap)  # drop bucket at end
+        buf = jnp.zeros((e * cap + 1, d), xg1.dtype).at[dest].set(xg1[st])
+        return buf[: e * cap].reshape(e, cap, d), (se, st, sp, keep, dest)
+
+    buf, (se, st, sp, keep, dest) = jax.vmap(route_one)(xg, top_e, top_p)
+    buf = shard_act(buf, ("groups", "experts", None, "embed_act"))
+
+    act = jax.nn.gelu if cfg.act == "geglu" else jax.nn.silu
+    wg = p["w_gate"].astype(buf.dtype)
+    wu = p["w_up"].astype(buf.dtype)
+    wd = p["w_down"].astype(buf.dtype)
+    h = act(jnp.einsum("gecd,edf->gecf", buf, wg)) * jnp.einsum("gecd,edf->gecf", buf, wu)
+    h = shard_act(h, ("groups", "experts", None, "ffn"))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, wd)
+    out_buf = shard_act(out_buf, ("groups", "experts", None, "embed_act"))
+
+    def combine_one(out_buf1, se1, st1, sp1, keep1, dest1):
+        flat = out_buf1.reshape(e * cap, d)
+        vals = jnp.where(keep1[:, None], flat[jnp.minimum(dest1, e * cap - 1)], 0.0)
+        vals = vals * sp1[:, None].astype(vals.dtype)
+        return jnp.zeros((tg, d), vals.dtype).at[st1].add(vals)
+
+    out = jax.vmap(combine_one)(out_buf, se, st, sp, keep, dest)
+    out = out.reshape(b, s, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sh["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, sh["w_up"].astype(x.dtype))
+        hh = act(g) * u
+        hh = shard_act(hh, ("batch", "seq", "ffn"))
+        shared_out = jnp.einsum("bsf,fd->bsd", hh, sh["w_down"].astype(x.dtype))
+        gate = jax.nn.sigmoid(jnp.einsum("bsd,dz->bsz", x, sh["gate"].astype(x.dtype)))
+        out = out + gate * shared_out
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full model: dense attention + MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def specs(cfg: ModelConfig) -> dict:
+    n = cfg.num_layers
+    return {
+        "embed": L.embed_specs(cfg),
+        "blocks": {
+            "ln1": spec((n, cfg.d_model), ("layers", None), init="ones"),
+            "attn": L.attention_specs(cfg, layers=n),
+            "ln2": spec((n, cfg.d_model), ("layers", None), init="ones"),
+            "moe": moe_specs(cfg, layers=n),
+        },
+        "final_norm": spec((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+def _block(cfg, p, h, positions, causal, attn_impl, num_groups, cache=None, cur_len=None):
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], cfg, x, positions)
+    new_kv = None
+    if cache is not None and cur_len is not None:
+        k_cache, v_cache = cache
+        idx = cur_len[0]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), idx, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), idx, axis=1)
+        attn = L.attend_decode(q, k_cache, v_cache, cur_len + 1)
+        new_kv = (k_cache, v_cache)
+    else:
+        attn = L.attend(q, k, v, positions, positions, causal, impl=attn_impl)
+        if cache == "collect":
+            new_kv = (k, v)
+    h = h + L.out_proj(p["attn"], attn)
+    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    h = h + moe_ffn(p["moe"], cfg, x, num_groups)
+    h = shard_act(h, ("batch", "seq", "embed_act"))
+    return h, new_kv
+
+
+def forward_hidden(params, cfg, embeds, positions=None, causal=False,
+                   attn_impl="auto", remat=False, num_groups=1):
+    b, s, _ = embeds.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, p):
+        h, _ = _block(cfg, p, h, positions, causal, attn_impl, num_groups)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    h, _ = jax.lax.scan(body, embeds, params["blocks"])
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def forward_train(params, cfg, tokens, attn_impl="auto", remat=True, num_groups=1):
+    e = L.embed(params["embed"], cfg, tokens)
+    e = shard_act(e, ("batch", "seq", "embed_act"))
+    h = forward_hidden(params, cfg, e, causal=True, attn_impl=attn_impl, remat=remat,
+                       num_groups=num_groups)
+    return L.unembed(params["embed"], cfg, h)
+
+
+init_cache = None  # set below (same as dense)
+from repro.models import dense as _dense  # noqa: E402
+
+init_cache = _dense.init_cache
+cache_specs = _dense.cache_specs
+cache_axes = _dense.cache_axes
+
+
+def prefill(params, cfg, tokens, max_len, attn_impl="auto", num_groups=1):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    e = L.embed(params["embed"], cfg, tokens)
+    e = shard_act(e, ("batch", "seq", "embed_act"))
+
+    def body(h, p):
+        h, kv = _block(cfg, p, h, positions, True, attn_impl, num_groups, cache="collect")
+        return h, kv
+
+    h, (ks, vs) = jax.lax.scan(body, e, params["blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, h)
+    pad = max_len - s
+    cache = {
+        "k": jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16),
+        "v": jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16),
+        "len": jnp.full((b,), s, jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg, tokens, cache, attn_impl="auto", num_groups=1):
+    b = tokens.shape[0]
+    cur = cache["len"]
+    positions = jnp.broadcast_to(cur[0][None, None], (b, 1)).astype(jnp.int32)
+    e = L.embed(params["embed"], cfg, tokens)
+
+    def body(h, xs):
+        p, k_cache, v_cache = xs
+        h, new_kv = _block(cfg, p, h, positions, True, attn_impl, num_groups,
+                           cache=(k_cache, v_cache), cur_len=cur)
+        return h, new_kv
+
+    h, (ks, vs) = jax.lax.scan(body, e, (params["blocks"], cache["k"], cache["v"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, h)
+    return logits, {"k": ks, "v": vs, "len": cur + 1}

@@ -1,0 +1,381 @@
+"""xLSTM-1.3B: alternating mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly recurrent) blocks with exponential gating and
+max-stabilizers. 1 sLSTM per ``slstm_every`` blocks; blocks carry their own
+up/down projections (assigned d_ff=0).
+
+Layout: ``num_layers`` blocks = G groups x [ (slstm_every-1) mLSTM + 1 sLSTM ].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import layers as L
+from repro.utils.pspec import spec
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    din = int(cfg.mlstm_proj_factor * d)  # mLSTM inner dim
+    h = cfg.num_heads
+    return d, din, h, din // h, d // h  # (d, din, H, hd_m, hd_s)
+
+
+def _groups(cfg: ModelConfig):
+    per = cfg.slstm_every
+    assert cfg.num_layers % per == 0
+    return cfg.num_layers // per, per - 1  # (G, mlstm per group)
+
+
+def _ffn_dim(d):
+    f = int(round(4 * d / 3))
+    return -(-f // 64) * 64
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig, lead: tuple):
+    d, din, h, hd, _ = _dims(cfg)
+    la = tuple("layers" if isinstance(x, int) else x for x in lead)
+    ld = tuple(x for x in lead)
+
+    def s(shape, axes, **kw):
+        return spec(ld + tuple(shape), la[: len(ld)] + tuple(axes), **kw)
+
+    return {
+        "ln": s((d,), (None,), init="ones"),
+        "w_up": s((d, din), ("embed", "mem")),
+        "w_gate": s((d, din), ("embed", "mem")),
+        "conv_w": s((cfg.ssm_conv, din), ("conv", "mem"), init="normal", scale=0.5),
+        # head-wise (block-diagonal) q/k/v, as in the official LinearHeadwise
+        "w_q": s((h, hd, hd), ("heads", "mem", None)),
+        "w_k": s((h, hd, hd), ("heads", "mem", None)),
+        "w_v": s((h, hd, hd), ("heads", "mem", None)),
+        "w_i": s((din, h), ("mem", "heads")),
+        "w_f": s((din, h), ("mem", "heads")),
+        "b_i": s((h,), ("heads",), init="zeros"),
+        "b_f": s((h,), ("heads",), init="ones"),
+        "skip": s((din,), ("mem",), init="ones"),
+        "out_norm": s((din,), ("mem",), init="ones"),
+        "w_down": s((din, d), ("mem", "embed")),
+    }
+
+
+def slstm_specs(cfg: ModelConfig, lead: tuple):
+    d, _, h, _, hd = _dims(cfg)
+    f = _ffn_dim(d)
+    la = tuple("layers" for _ in lead)
+
+    def s(shape, axes, **kw):
+        return spec(tuple(lead) + tuple(shape), la + tuple(axes), **kw)
+
+    return {
+        "ln": s((d,), (None,), init="ones"),
+        "conv_w": s((cfg.ssm_conv, d), ("conv", "embed"), init="normal", scale=0.5),
+        "w_gates": s((d, 4, h, hd), ("embed", None, "heads", None)),  # z,i,f,o
+        "r_gates": s((4, h, hd, hd), (None, "heads", None, None), init="normal",
+                     scale=0.02),
+        "b_gates": s((4, h, hd), (None, "heads", None), init="zeros"),
+        "out_norm": s((d,), (None,), init="ones"),
+        "ffn": {
+            "w_gate": s((d, f), ("embed", "ffn")),
+            "w_up": s((d, f), ("embed", "ffn")),
+            "w_down": s((f, d), ("ffn", "embed")),
+        },
+    }
+
+
+def specs(cfg: ModelConfig) -> dict:
+    g, m_per = _groups(cfg)
+    return {
+        "embed": L.embed_specs(cfg),
+        "mlstm": mlstm_specs(cfg, (g, m_per)),
+        "slstm": slstm_specs(cfg, (g,)),
+        "final_norm": spec((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel + recurrent step
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, state, chunk):
+    """q/k/v: [B,S,H,hd]; ig/fg: [B,S,H] raw gate pre-activations.
+
+    Returns (h [B,S,H,hd], new_state). State = (c [B,H,hd,hd], n [B,H,hd],
+    m [B,H]).
+    """
+    b, s, h, hd = q.shape
+    lc = min(chunk, s)
+    assert s % lc == 0
+    nc = s // lc
+    c0, n0, m0 = state
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qc = q.reshape(b, nc, lc, h, hd).astype(jnp.float32)
+    kc = k.reshape(b, nc, lc, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, lc, h, hd).astype(jnp.float32)
+    igc = ig.reshape(b, nc, lc, h).astype(jnp.float32)
+    fgc = fg.reshape(b, nc, lc, h).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((lc, lc), bool))
+
+    def body(carry, inp):
+        c_p, n_p, m_p = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qj, kj, vj, ij, fj = inp  # [B,Lc,H,hd], ..., [B,Lc,H]
+        blogf = jnp.cumsum(jax.nn.log_sigmoid(fj), axis=1)  # [B,Lc,H]
+        total = blogf[:, -1, :]  # [B,H]
+        # intra-chunk log weights S[l,m] = blogf_l - blogf_m + i_m  (m <= l)
+        s_lm = blogf[:, :, None, :] - blogf[:, None, :, :] + ij[:, None, :, :]
+        s_lm = jnp.where(mask[None, :, :, None], s_lm, -jnp.inf)
+        m_intra = jnp.max(s_lm, axis=2)  # [B,Lc,H]
+        m_inter = m_p[:, None, :] + blogf  # [B,Lc,H]
+        m_comb = jnp.maximum(m_intra, m_inter)
+        w_intra = jnp.exp(s_lm - m_comb[:, :, None, :])  # [B,Lc,Lc,H]
+        w_inter = jnp.exp(m_inter - m_comb)  # [B,Lc,H]
+        a = jnp.einsum("blhd,bmhd->blmh", qj, kj) * scale * w_intra
+        num = jnp.einsum("blmh,bmhd->blhd", a, vj)
+        num = num + w_inter[..., None] * jnp.einsum("blhd,bhde->blhe", qj * scale, c_p)
+        den = jnp.sum(a, axis=2) + w_inter * jnp.einsum("blhd,bhd->blh", qj * scale, n_p)
+        hj = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_comb))[..., None]
+        # state update to end of chunk
+        m_new = jnp.maximum(m_p + total, jnp.max(total[:, None, :] - blogf + ij, axis=1))
+        w_st = jnp.exp(total[:, None, :] - blogf + ij - m_new[:, None, :])  # [B,Lc,H]
+        c_new = (jnp.exp(m_p + total - m_new)[:, :, None, None] * c_p
+                 + jnp.einsum("bmh,bmhd,bmhe->bhde", w_st, kj, vj))
+        n_new = (jnp.exp(m_p + total - m_new)[:, :, None] * n_p
+                 + jnp.einsum("bmh,bmhd->bhd", w_st, kj))
+        return (c_new, n_new, m_new), hj
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, igc, fgc))
+    (c1, n1, m1), hs = jax.lax.scan(body, (c0, n0, m0), xs)
+    hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, h, hd)
+    return hseq, (c1, n1, m1)
+
+
+def _mlstm_step(q, k, v, ig, fg, state):
+    """Single-token recurrent mLSTM. q/k/v: [B,H,hd]; ig/fg: [B,H]."""
+    c_p, n_p, m_p = state
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m_p, ig)
+    i_ = jnp.exp(ig - m_new)
+    f_ = jnp.exp(logf + m_p - m_new)
+    c_new = f_[:, :, None, None] * c_p + i_[:, :, None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n_new = f_[:, :, None] * n_p + i_[:, :, None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, c_new)
+    den = jnp.einsum("bhd,bhd->bh", q * scale, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (c_new, n_new, m_new)
+
+
+def _mlstm_block(p, cfg, x, state=None, conv_state=None, step=False):
+    """x: [B,S,D] (S=1 if step). Returns (out, (state, conv_state))."""
+    d, din, h, hd, _ = _dims(cfg)
+    b = x.shape[0]
+    xin = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    u = jnp.einsum("bsd,dk->bsk", xin, p["w_up"].astype(x.dtype))
+    g = jnp.einsum("bsd,dk->bsk", xin, p["w_gate"].astype(x.dtype))
+    u = shard_act(u, ("batch", "seq", "mem"))
+    from repro.models.mamba2 import _depthwise_causal_conv
+    if conv_state is not None:
+        conv_state = conv_state.astype(u.dtype)
+    cv, new_conv = _depthwise_causal_conv(u, p["conv_w"].astype(x.dtype), conv_state)
+    cv = jax.nn.silu(cv)
+    cvh = cv.reshape(b, -1, h, hd)
+    uh = u.reshape(b, -1, h, hd)
+    q = jnp.einsum("bshk,hkj->bshj", cvh, p["w_q"].astype(x.dtype))
+    k = jnp.einsum("bshk,hkj->bshj", cvh, p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bshk,hkj->bshj", uh, p["w_v"].astype(x.dtype))
+    ig = jnp.einsum("bsk,kh->bsh", cv, p["w_i"].astype(x.dtype)).astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    fg = jnp.einsum("bsk,kh->bsh", cv, p["w_f"].astype(x.dtype)).astype(jnp.float32) + p["b_f"].astype(jnp.float32)
+
+    if state is None:
+        state = (jnp.zeros((b, h, hd, hd), jnp.float32),
+                 jnp.zeros((b, h, hd), jnp.float32),
+                 jnp.zeros((b, h), jnp.float32))
+    if step:
+        hout, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0], state)
+        hout = hout[:, None]
+    else:
+        hout, new_state = _mlstm_chunkwise(q, k, v, ig, fg, state, cfg.ssm_chunk)
+    hout = hout.reshape(b, -1, din).astype(x.dtype)
+    hout = hout + p["skip"].astype(x.dtype) * cv
+    hout = L.rmsnorm(hout, p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", hout * jax.nn.silu(g), p["w_down"].astype(x.dtype))
+    return x + out, (new_state, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM cell (strictly sequential)
+# ---------------------------------------------------------------------------
+
+
+def _slstm_scan(p, cfg, x, state, conv_state):
+    """x: [B,S,D]. state = (c, n, m, hprev) each [B,H,hd]."""
+    d, _, h, _, hd = _dims(cfg)
+    b, s, _ = x.shape
+    from repro.models.mamba2 import _depthwise_causal_conv
+    if conv_state is not None:
+        conv_state = conv_state.astype(x.dtype)
+    cv, new_conv = _depthwise_causal_conv(x, p["conv_w"].astype(x.dtype), conv_state)
+    cv = jax.nn.silu(cv)
+    # input contributions for all gates, all steps: [B,S,4,H,hd]
+    wx = jnp.einsum("bsd,dghk->bsghk", cv, p["w_gates"].astype(x.dtype)).astype(jnp.float32)
+    wx = wx + p["b_gates"].astype(jnp.float32)
+    r = p["r_gates"].astype(jnp.float32)
+
+    def body(carry, wxt):
+        c_p, n_p, m_p, h_p = carry
+        rh = jnp.einsum("bhk,ghkj->bghj", h_p, r)  # [B,4,H,hd]
+        zt, it, ft, ot = [wxt[:, i] + rh[:, i] for i in range(4)]
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m_p, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(logf + m_p - m_new)
+        c_new = f_ * c_p + i_ * zt
+        n_new = jnp.maximum(f_ * n_p + i_, 1e-6)
+        h_new = ot * (c_new / n_new)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    new_state, hs = jax.lax.scan(body, state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    return hs, new_state, new_conv
+
+
+def _slstm_block(p, cfg, x, state=None, conv_state=None):
+    d, _, h, _, hd = _dims(cfg)
+    b = x.shape[0]
+    xin = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    if state is None:
+        z = jnp.zeros((b, h, hd), jnp.float32)
+        state = (z, z + 1e-6, z, z)
+    hs, new_state, new_conv = _slstm_scan(p, cfg, xin, state, conv_state)
+    hs = L.rmsnorm(hs, p["out_norm"], cfg.norm_eps)
+    x = x + hs
+    # post-FFN (GeGLU, factor 4/3)
+    xin = x  # pre-norm already applied pattern: use fresh norm-free gating
+    gcfg = cfg.replace(act="geglu")
+    x = x + L.mlp(p["ffn"], gcfg, xin)
+    return x, (new_state, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _zero_states(cfg, b):
+    d, din, h, hd, hds = _dims(cfg)
+    g, m_per = _groups(cfg)
+    w = cfg.ssm_conv
+    f32 = jnp.float32
+    return {
+        "m_c": jnp.zeros((g, m_per, b, h, hd, hd), f32),
+        "m_n": jnp.zeros((g, m_per, b, h, hd), f32),
+        "m_m": jnp.zeros((g, m_per, b, h), f32),
+        "m_conv": jnp.zeros((g, m_per, b, w - 1, din), f32),
+        "s_c": jnp.zeros((g, b, h, hds), f32),
+        "s_n": jnp.full((g, b, h, hds), 1e-6, f32),
+        "s_m": jnp.zeros((g, b, h, hds), f32),
+        "s_h": jnp.zeros((g, b, h, hds), f32),
+        "s_conv": jnp.zeros((g, b, w - 1, d), f32),
+        "len": jnp.zeros((b,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch, max_len=None, dtype=None):
+    z = jax.eval_shape(lambda: _zero_states(cfg, batch))
+    return z
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        # matrix memory shards its OUTPUT dim (e): q.C contracts d locally,
+        # C updates slice locally from replicated k(x)v — no per-layer gathers
+        # (the d-dim sharding thrashed SPMD propagation; EXPERIMENTS §Roofline)
+        "m_c": ("layers", None, "batch", "heads", None, "mem"),
+        "m_n": ("layers", None, "batch", "heads", "mem"),
+        "m_m": ("layers", None, "batch", "heads"),
+        "m_conv": ("layers", None, "batch", "conv", "mem"),
+        "s_c": ("layers", "batch", "heads", None),
+        "s_n": ("layers", "batch", "heads", None),
+        "s_m": ("layers", "batch", "heads", None),
+        "s_h": ("layers", "batch", "heads", None),
+        "s_conv": ("layers", "batch", "conv", "embed"),
+        "len": ("batch",),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch, max_len=None, dtype=None):
+    return _zero_states(cfg, batch)
+
+
+def _run(params, cfg, e, cache, step: bool, remat: bool = False):
+    g, m_per = _groups(cfg)
+    st = cache if cache is not None else _zero_states(cfg, e.shape[0])
+
+    def outer(h, xs):
+        pm, ps, mc, mn, mm, mcv, sc, sn, sm, sh, scv = xs
+
+        def mstep(hc, inp):
+            pp, c_, n_, m_, cv_ = inp
+            hh, ((nc_, nn_, nm_), ncv_) = _mlstm_block(
+                pp, cfg, hc, (c_, n_, m_), cv_ if cache is not None else None,
+                step=step)
+            return hh, (nc_, nn_, nm_, ncv_.astype(jnp.float32))
+
+        h, (ncs, nns, nms, ncvs) = jax.lax.scan(mstep, h, (pm, mc, mn, mm, mcv))
+        h, ((sc2, sn2, sm2, sh2), scv2) = _slstm_block(
+            ps, cfg, h, (sc, sn, sm, sh), scv if cache is not None else None)
+        return h, (ncs, nns, nms, ncvs, sc2, sn2, sm2, sh2,
+                   (scv2 if scv2 is not None else scv).astype(jnp.float32))
+
+    xs = (params["mlstm"], params["slstm"], st["m_c"], st["m_n"], st["m_m"],
+          st["m_conv"], st["s_c"], st["s_n"], st["s_m"], st["s_h"], st["s_conv"])
+    if remat:
+        outer = jax.checkpoint(
+            outer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    h, ys = jax.lax.scan(outer, e, xs)
+    new_cache = {
+        "m_c": ys[0], "m_n": ys[1], "m_m": ys[2], "m_conv": ys[3],
+        "s_c": ys[4], "s_n": ys[5], "s_m": ys[6], "s_h": ys[7], "s_conv": ys[8],
+        "len": st["len"] + e.shape[1],
+    }
+    return h, new_cache
+
+
+def forward_hidden(params, cfg: ModelConfig, embeds, positions=None, causal=True,
+                   attn_impl=None, remat=False, cache=None):
+    h, _ = _run(params, cfg, embeds, cache, step=False, remat=remat)
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def forward_train(params, cfg: ModelConfig, tokens, attn_impl=None, remat=True):
+    e = L.embed(params["embed"], cfg, tokens)
+    e = shard_act(e, ("batch", "seq", "embed_act"))
+    h = forward_hidden(params, cfg, e, remat=remat)
+    return L.unembed(params["embed"], cfg, h)
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len=None, attn_impl=None):
+    e = L.embed(params["embed"], cfg, tokens)
+    h, cache = _run(params, cfg, e, _zero_states(cfg, tokens.shape[0]), step=False)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], cfg, h), cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, attn_impl=None):
+    e = L.embed(params["embed"], cfg, tokens)
+    h, new_cache = _run(params, cfg, e, cache, step=True)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], cfg, h), new_cache

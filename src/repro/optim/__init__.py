@@ -1,0 +1,1 @@
+from repro.optim.optimizer import AdamWConfig, apply_updates, init_state, lr_at, state_axes, state_structs  # noqa: F401

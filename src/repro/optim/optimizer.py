@@ -1,0 +1,139 @@
+"""AdamW with ZeRO-shardable state + optional error-feedback gradient
+compression state.
+
+State layout mirrors the parameter tree so the same logical-axis sharding
+rules apply — m/v/w32 (fp32 master) are 2-D sharded over (data x model) and
+never replicated (ZeRO-3). ``opt_axes`` derives the state's logical axes from
+the param spec tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    compress_grads: bool = False  # error-feedback int8 gradient compression
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_state(params: Tree, cfg: AdamWConfig) -> dict:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree_util.tree_map(f32, params),
+        "v": jax.tree_util.tree_map(f32, params),
+        "w32": jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree_util.tree_map(f32, params)
+    return state
+
+
+def state_structs(param_structs: Tree, cfg: AdamWConfig) -> dict:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    s = {
+        "m": jax.tree_util.tree_map(f32, param_structs),
+        "v": jax.tree_util.tree_map(f32, param_structs),
+        "w32": jax.tree_util.tree_map(f32, param_structs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.compress_grads:
+        s["err"] = jax.tree_util.tree_map(f32, param_structs)
+    return s
+
+
+def state_axes(param_axes: Tree, cfg: AdamWConfig) -> dict:
+    ident = lambda a: a
+    s = {
+        "m": jax.tree_util.tree_map(ident, param_axes,
+                                    is_leaf=lambda x: isinstance(x, tuple)),
+        "v": jax.tree_util.tree_map(ident, param_axes,
+                                    is_leaf=lambda x: isinstance(x, tuple)),
+        "w32": jax.tree_util.tree_map(ident, param_axes,
+                                      is_leaf=lambda x: isinstance(x, tuple)),
+        "step": (),
+    }
+    if cfg.compress_grads:
+        s["err"] = s["m"]
+    return s
+
+
+def _global_norm(tree: Tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _quantize_ef(g, err):
+    """int8 error-feedback quantization (models the compressed all-reduce)."""
+    gq = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gq)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gq / scale), -127, 127)
+    deq = q * scale
+    return deq, gq - deq
+
+
+def apply_updates(params: Tree, grads: Tree, state: dict, cfg: AdamWConfig):
+    """One AdamW step (fp32 math on the ZeRO-sharded master copy)."""
+    step = state["step"]
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * clip, grads)
+
+    new_err = None
+    if cfg.compress_grads:
+        pairs = jax.tree_util.tree_map(_quantize_ef, grads, state["err"])
+        grads = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    b2c = 1 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(w32, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        w32n = w32 - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w32)
+        return w32n, m, v
+
+    out = jax.tree_util.tree_map(upd, state["w32"], grads, state["m"], state["v"])
+    w32 = jax.tree_util.tree_map(lambda o: o[0], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree_util.tree_map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree_util.tree_map(lambda o: o[2], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    dt = jax.tree_util.tree_leaves(params)[0].dtype
+    new_params = jax.tree_util.tree_map(lambda w: w.astype(dt), w32)
+    new_state = {"m": m, "v": v, "w32": w32, "step": step + 1}
+    if cfg.compress_grads:
+        new_state["err"] = new_err
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

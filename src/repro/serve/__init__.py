@@ -1,0 +1,2 @@
+from repro.serve.engine import ChordsEngine, Request, SampleOut, StreamingSampler  # noqa: F401
+from repro.serve.steps import greedy_generate, make_decode_step, make_prefill  # noqa: F401

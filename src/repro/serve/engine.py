@@ -1,0 +1,129 @@
+"""CHORDS serving engine: streaming early-exit sampling + request batching.
+
+``StreamingSampler`` runs Algorithm 1 inside a single jitted ``while_loop``
+that stops as soon as two consecutive streamed outputs agree within rtol
+(paper Section 5 "diffusion streaming") — the deployment path, where rounds
+not executed are wall-clock saved. ``ChordsEngine`` batches queued requests
+up to max_batch and serves them through the sampler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler
+from repro.core.chords import chords_init_carry, make_round_body
+from repro.core.init_sequence import make_sequence
+
+
+@dataclasses.dataclass
+class SampleOut:
+    sample: jax.Array
+    rounds_used: int
+    accepted_core: int
+    speedup: float
+
+
+class StreamingSampler:
+    def __init__(self, drift, n_steps: int, num_cores: int, tgrid,
+                 i_seq: Optional[Sequence[int]] = None, rtol: float = 0.05):
+        self.n = n_steps
+        self.k = num_cores
+        self.tgrid = tgrid
+        self.i_seq = list(i_seq) if i_seq is not None else make_sequence(
+            num_cores, n_steps)
+        self.i_arr = jnp.asarray(self.i_seq, jnp.int32)
+        self.rtol = rtol
+        self.drift = drift
+        self._jitted = None
+
+    def _build(self, x0):
+        round_body = make_round_body(self.drift, self.tgrid, self.i_arr, self.n,
+                                     self.k)
+        emit = jnp.asarray(scheduler.emit_rounds(self.i_seq, self.n))
+        rtol = self.rtol
+        n = self.n
+
+        def cond(state):
+            carry, r, accepted, _, _, _ = state
+            return (~accepted) & (r <= n)
+
+        def body(state):
+            carry, r, accepted, last_out, has_last, chosen = state
+            carry, _ = round_body(carry, r)
+            x = carry[0]
+            emitted_k = jnp.argmax(emit == r)  # core emitting this round (if any)
+            any_emit = jnp.any(emit == r)
+            out = x[emitted_k]
+            num = jnp.sqrt(jnp.sum((out - last_out) ** 2))
+            den = jnp.sqrt(jnp.sum(out**2)) + 1e-12
+            ok = any_emit & has_last & (num / den < rtol)
+            accepted = accepted | ok
+            chosen = jnp.where(ok, emitted_k, chosen)
+            last_out = jnp.where(any_emit, out, last_out)
+            has_last = has_last | any_emit
+            return carry, r + 1, accepted, last_out, has_last, chosen
+
+        def run(x0):
+            carry = chords_init_carry(x0, self.i_arr, self.k)
+            state = (carry, jnp.asarray(1), jnp.asarray(False), jnp.zeros_like(x0),
+                     jnp.asarray(False), jnp.asarray(0))
+            carry, r, accepted, last_out, _, chosen = jax.lax.while_loop(
+                cond, body, state)
+            return last_out, r - 1, chosen
+
+        return jax.jit(run)
+
+    def sample(self, x0) -> SampleOut:
+        if self._jitted is None:
+            self._jitted = self._build(x0)
+        out, rounds, chosen = self._jitted(x0)
+        rounds = int(rounds)
+        return SampleOut(out, rounds, int(chosen), self.n / max(1, rounds))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    key: jax.Array
+    cond: Optional[object] = None
+
+
+class ChordsEngine:
+    """Batched request server around the streaming sampler."""
+
+    def __init__(self, drift_builder: Callable, latent_shape: tuple,
+                 n_steps: int, num_cores: int, tgrid, max_batch: int = 8,
+                 rtol: float = 0.05):
+        self.latent_shape = latent_shape
+        self.max_batch = max_batch
+        self.drift_builder = drift_builder
+        self.sampler = StreamingSampler(drift_builder, n_steps, num_cores, tgrid,
+                                        rtol=rtol)
+        self.queue: list[Request] = []
+        self.stats = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def step(self) -> list[tuple[int, SampleOut]]:
+        """Serve one batch from the queue; returns [(rid, SampleOut)]."""
+        if not self.queue:
+            return []
+        batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
+        keys = jnp.stack([r.key for r in batch])
+        noise = jax.vmap(
+            lambda kk: jax.random.normal(kk, self.latent_shape))(keys)
+        t0 = time.perf_counter()
+        out = self.sampler.sample(noise)
+        dt = time.perf_counter() - t0
+        self.stats.append({"batch": len(batch), "rounds": out.rounds_used,
+                           "speedup": out.speedup, "wall_s": dt})
+        return [(r.rid, SampleOut(out.sample[i], out.rounds_used,
+                                  out.accepted_core, out.speedup))
+                for i, r in enumerate(batch)]

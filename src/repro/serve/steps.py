@@ -1,0 +1,57 @@
+"""LM serving steps (prefill / decode) — unified per-family dispatch used by
+the dry-run cells and the generation example. Greedy sampling included."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api as model_api
+
+
+def make_prefill(cfg: ModelConfig, max_len: int, attn_impl: str = "chunked",
+                 **kw):
+    mod = model_api.get_module(cfg)
+
+    if model_api.is_encdec(cfg):
+        def prefill(params, tokens, src_embeds):
+            return mod.prefill(params, cfg, tokens, max_len, src_embeds,
+                               attn_impl=attn_impl)
+        return prefill
+
+    if cfg.family == "ssm":  # xlstm: no max_len concept (recurrent state)
+        def prefill(params, tokens):
+            return mod.prefill(params, cfg, tokens)
+        return prefill
+
+    def prefill(params, tokens):
+        return mod.prefill(params, cfg, tokens, max_len, attn_impl=attn_impl, **kw)
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, **kw):
+    mod = model_api.get_module(cfg)
+
+    def decode(params, tokens, cache):
+        return mod.decode_step(params, cfg, tokens, cache, **kw)
+
+    return decode
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, steps: int, max_len: int,
+                    **kw):
+    """prompt: [B, S0] -> [B, S0+steps] greedy tokens (CPU-scale helper)."""
+    mod = model_api.get_module(cfg)
+    prefill = make_prefill(cfg, max_len, **kw)
+    decode = jax.jit(make_decode_step(cfg))
+    logits, cache = prefill(params, prompt)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    outs = [prompt, tok]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

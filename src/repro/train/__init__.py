@@ -1,0 +1,2 @@
+from repro.train.train_step import make_eval_step, make_train_step  # noqa: F401
+from repro.train.trainer import TrainLoopConfig, train_loop  # noqa: F401

@@ -1,0 +1,72 @@
+"""Sharded training step: microbatched grad accumulation + ZeRO AdamW.
+
+The builder returns a function suitable for ``jax.jit`` with explicit
+in/out shardings (see ``repro.launch.dryrun``); inside, activations carry
+logical sharding constraints, grads accumulate over a microbatch scan (keeps
+live activation memory to one microbatch), and the optimizer update runs on
+the 2-D-sharded fp32 master state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import api as model_api
+from repro.optim.optimizer import AdamWConfig, apply_updates
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def _tree_zeros_f32(t):
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1, **fw_kwargs):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def loss_fn(params, mb):
+        return model_api.lm_loss(params, cfg, mb, **fw_kwargs)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                nm = num_microbatches
+                x = x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+                return shard_act(x, (None, "batch") + (None,) * (x.ndim - 2))
+
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                gsum, lsum = acc
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (_tree_add(gsum, g), lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (_tree_zeros_f32(params), jnp.zeros((), jnp.float32)), mbs)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g * inv, gsum)
+            loss = lsum * inv
+
+        new_params, new_state, metrics = apply_updates(params, grads, opt_state,
+                                                       opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, **fw_kwargs):
+    def eval_step(params, batch):
+        return model_api.lm_loss(params, cfg, batch, **fw_kwargs)
+
+    return eval_step

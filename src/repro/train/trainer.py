@@ -1,0 +1,69 @@
+"""Training loop with checkpoint/restart, straggler monitoring, and
+deterministic data resume — the single-process engine the launcher drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.checkpoint import CheckpointManager
+from repro.dist.fault_tolerance import HeartbeatMonitor
+from repro.optim.optimizer import AdamWConfig, init_state
+from repro.train.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+
+
+def train_loop(cfg: ModelConfig, params, data_iter, opt_cfg: AdamWConfig,
+               loop_cfg: TrainLoopConfig, train_step=None, monitor=None,
+               log_fn=print, **fw_kwargs):
+    """Runs the loop; resumes from the latest complete checkpoint if present.
+
+    Returns (params, opt_state, history). ``train_step`` may be a pre-jitted
+    sharded step from the launcher; defaults to a local jit.
+    """
+    opt_state = init_state(params, opt_cfg)
+    step0 = 0
+    ckpt = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep_ckpts) \
+        if loop_cfg.ckpt_dir else None
+    if ckpt is not None:
+        restored = ckpt.restore_latest({"params": params, "opt": opt_state})
+        if restored is not None:
+            state, step0 = restored
+            params, opt_state = state["params"], state["opt"]
+            log_fn(f"[trainer] resumed from step {step0}")
+
+    if train_step is None:
+        train_step = jax.jit(make_train_step(cfg, opt_cfg, **fw_kwargs))
+    monitor = monitor or HeartbeatMonitor(num_workers=1)
+
+    history = []
+    for step in range(step0, loop_cfg.total_steps):
+        batch = data_iter(step)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.beat(0, step, dt)
+        if step % loop_cfg.log_every == 0 or step == loop_cfg.total_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, "time_s": dt, **m})
+            log_fn(f"[trainer] step={step} loss={m['loss']:.4f} "
+                   f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} {dt*1e3:.0f}ms")
+        if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
+            ckpt.save({"params": params, "opt": opt_state}, step + 1)
+    if ckpt is not None:
+        ckpt.save({"params": params, "opt": opt_state}, loop_cfg.total_steps)
+    return params, opt_state, history

@@ -1,0 +1,9 @@
+from repro.utils.pspec import (  # noqa: F401
+    ParamSpec,
+    count_params,
+    init_params,
+    is_spec,
+    logical_axes,
+    param_structs,
+    spec,
+)

@@ -1,0 +1,82 @@
+"""Parameter-spec machinery.
+
+Models declare their parameters as trees of :class:`ParamSpec` (shape + logical
+axis names + initializer). From one spec tree we derive, without duplication:
+
+* materialized parameters (``init_params``)
+* ``jax.ShapeDtypeStruct`` stand-ins for dry-run lowering (``param_structs``)
+* logical-axis trees consumed by ``repro.dist.sharding`` (``logical_axes``)
+
+Logical axis vocabulary (mapped to mesh axes by sharding rules):
+  "vocab", "embed", "heads", "kv_heads", "head_dim", "ffn", "experts",
+  "layers", "groups", "state", "conv", None (never sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple  # logical axis name (str|None) per dim; len(axes) == len(shape)
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def spec(shape, axes, init: str = "fan_in", scale: float = 1.0) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(s: ParamSpec, key, dtype) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    if s.init == "normal":
+        return (s.scale * jax.random.normal(key, s.shape)).astype(dtype)
+    if s.init == "embed":
+        return (s.scale * jax.random.normal(key, s.shape)).astype(dtype)
+    if s.init == "fan_in":
+        # truncated-normal, stddev 1/sqrt(fan_in); fan_in = prod of all dims but last
+        fan_in = max(1, math.prod(s.shape[:-1]))
+        std = s.scale / math.sqrt(fan_in)
+        return (std * jax.random.truncated_normal(key, -2.0, 2.0, s.shape)).astype(dtype)
+    raise ValueError(f"unknown init {s.init}")
+
+
+def init_params(specs: Tree, key, dtype=jnp.float32) -> Tree:
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_one(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_structs(specs: Tree, dtype=jnp.bfloat16) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=is_spec
+    )
+
+
+def logical_axes(specs: Tree) -> Tree:
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def count_params(specs: Tree) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

@@ -1,0 +1,48 @@
+"""ParaDIGMS / SRDS baselines: convergence to the sequential oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GaussianMixture, paradigms_sample, sequential_sample,
+                        srds_sample, uniform_tgrid)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=4, dim=8)
+    tg = uniform_tgrid(50, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    seq = np.asarray(sequential_sample(gm.drift, x0, tg))
+    return gm, tg, x0, seq
+
+
+def test_paradigms_converges(setup):
+    gm, tg, x0, seq = setup
+    res = paradigms_sample(gm.drift, x0, tg, window=8, tol=1e-4)
+    rmse = np.sqrt(((np.asarray(res.output) - seq) ** 2).mean())
+    assert rmse < 1e-2
+    assert res.rounds < 50  # actually parallelizes
+    assert res.speedup > 1.0
+
+
+def test_paradigms_speedup_grows_with_window(setup):
+    gm, tg, x0, _ = setup
+    r4 = paradigms_sample(gm.drift, x0, tg, window=4)
+    r8 = paradigms_sample(gm.drift, x0, tg, window=8)
+    assert r8.rounds <= r4.rounds
+
+
+def test_srds_exact_at_convergence(setup):
+    gm, tg, x0, seq = setup
+    res = srds_sample(gm.drift, x0, tg, num_segments=5, tol=1e-6, max_iters=5)
+    rmse = np.sqrt(((np.asarray(res.output) - seq) ** 2).mean())
+    assert rmse < 1e-3  # parareal converges to the fine solution
+
+
+def test_srds_early_stop_fewer_rounds(setup):
+    gm, tg, x0, _ = setup
+    tight = srds_sample(gm.drift, x0, tg, num_segments=5, tol=1e-7)
+    loose = srds_sample(gm.drift, x0, tg, num_segments=5, tol=5e-2)
+    assert loose.rounds <= tight.rounds
+    assert loose.iters <= tight.iters

@@ -1,0 +1,107 @@
+"""Core CHORDS invariants (paper Algorithm 1 + Section 3 remark)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    GaussianMixture, chords_sample, exponential_drift, make_sequence,
+    select_output, sequential_sample, uniform_tgrid)
+from repro.core.scheduler import emit_rounds, positions_np
+
+
+@pytest.fixture(scope="module")
+def gmm():
+    return GaussianMixture.random(jax.random.PRNGKey(0), num_modes=4, dim=8)
+
+
+def test_slowest_core_equals_sequential(gmm):
+    """Paper: 'the last output is guaranteed identical to no-acceleration'."""
+    n = 50
+    tg = uniform_tgrid(n, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+    seq = sequential_sample(gmm.drift, x0, tg)
+    for k in (2, 4, 6, 8):
+        res = chords_sample(gmm.drift, x0, tg, make_sequence(k, n))
+        np.testing.assert_allclose(res.outputs[0], seq, atol=1e-5)
+
+
+def test_error_decreases_slow_to_fast(gmm):
+    n = 50
+    tg = uniform_tgrid(n, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (16, 8))
+    seq = np.asarray(sequential_sample(gmm.drift, x0, tg))
+    res = chords_sample(gmm.drift, x0, tg, make_sequence(8, n))
+    rmse = [float(np.sqrt(((np.asarray(res.outputs[k]) - seq) ** 2).mean()))
+            for k in range(8)]
+    # earlier (slower) cores at least as accurate as the fastest
+    assert rmse[0] < 1e-5
+    assert max(rmse[:4]) <= rmse[-1] + 1e-6
+    # fastest core still close (no quality collapse): relative RMSE < 2%
+    scale = np.sqrt((seq**2).mean())
+    assert rmse[-1] / scale < 0.02
+
+
+def test_rectification_beats_no_communication(gmm):
+    """CHORDS fast output must beat the same-schedule solver without
+    rectification (pure coarse-start Euler)."""
+    n = 50
+    tg = uniform_tgrid(n, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(3), (8, 8))
+    seq = np.asarray(sequential_sample(gmm.drift, x0, tg))
+    i_seq = make_sequence(4, n)
+    res = chords_sample(gmm.drift, x0, tg, i_seq)
+    # no-communication baseline for the fastest core: jump + solo fine solve
+    k = len(i_seq)
+    x = x0
+    for j in range(k - 1):  # init jumps
+        x = x + (tg[i_seq[j + 1]] - tg[i_seq[j]]) * gmm.drift(x, tg[i_seq[j]])
+    for i in range(i_seq[-1], n):  # solo fine steps
+        x = x + (tg[i + 1] - tg[i]) * gmm.drift(x, tg[i])
+    err_solo = np.sqrt(((np.asarray(x) - seq) ** 2).mean())
+    err_chords = np.sqrt(((np.asarray(res.outputs[-1]) - seq) ** 2).mean())
+    assert err_chords < err_solo * 0.5
+
+
+def test_speedups_match_paper_formula():
+    n = 50
+    tg = uniform_tgrid(n)
+    x0 = jnp.ones((2,))
+    for k, expect in [(4, 50 / 21), (6, 50 / 19), (8, 50 / 17)]:
+        res = chords_sample(exponential_drift, x0, tg, make_sequence(k, n))
+        assert res.speedup(k - 1) == pytest.approx(expect)
+
+
+def test_select_output_streaming(gmm):
+    n = 50
+    tg = uniform_tgrid(n, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(4), (4, 8))
+    res = chords_sample(gmm.drift, x0, tg, make_sequence(8, n))
+    core, rounds, speedup = select_output(res, rtol=0.05)
+    assert speedup > 1.5
+    assert rounds == res.emit_rounds[core]
+
+
+def test_scheduler_positions():
+    i_seq = [0, 2, 4, 8]
+    n = 20
+    # jump phase: core k does k jumps along the init sequence
+    cur, nxt = positions_np(i_seq, 1)
+    assert list(cur) == [0, 0, 0, 0] and list(nxt) == [1, 2, 2, 2]
+    cur, nxt = positions_np(i_seq, 3)
+    assert cur[3] == 4 and nxt[3] == 8  # core 3's final jump
+    assert cur[0] == 2 and nxt[0] == 3  # core 0 fine-stepping
+    er = emit_rounds(i_seq, n)
+    assert list(er) == [20, 19, 18, 15]
+
+
+def test_exact_on_linear_drift_all_cores():
+    """For f(x)=x each rectification from an exact core leaves tiny error."""
+    n = 40
+    tg = uniform_tgrid(n)
+    x0 = jnp.ones((3,))
+    seq = sequential_sample(exponential_drift, x0, tg)
+    res = chords_sample(exponential_drift, x0, tg, [0, 5, 10, 20])
+    errs = np.abs(np.asarray(res.outputs) - np.asarray(seq)).max(axis=-1)
+    assert errs[0] < 1e-6
+    assert np.all(errs < 0.01)

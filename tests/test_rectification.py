@@ -1,0 +1,51 @@
+"""Proposition 2.1: rectification reduces approximation error to o(err)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ode import GaussianMixture
+from repro.core.rectify import rectify_delta
+
+
+def _fine_solve(drift, x, t0, t1, steps=400):
+    tg = jnp.linspace(t0, t1, steps + 1)
+    for i in range(steps):
+        x = x + (tg[i + 1] - tg[i]) * drift(x, tg[i])
+    return x
+
+
+def _errors(delta, pert=0.05):
+    gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=3, dim=4)
+    t = 0.3
+    x_t = jax.random.normal(jax.random.PRNGKey(1), (6, 4))
+    x_tilde = x_t + pert * jax.random.normal(jax.random.PRNGKey(2), (6, 4))
+    x_next = _fine_solve(gm.drift, x_t, t, t + delta)
+    xt_next = _fine_solve(gm.drift, x_tilde, t, t + delta)
+    r = rectify_delta(x_t, gm.drift(x_t, t), x_tilde, gm.drift(x_tilde, t),
+                      delta)
+    before = float(jnp.linalg.norm(xt_next - x_next))
+    after = float(jnp.linalg.norm(xt_next + r - x_next))
+    return before, after
+
+
+@pytest.mark.parametrize("delta", [0.2, 0.1, 0.05, 0.025])
+def test_rectification_always_improves(delta):
+    before, after = _errors(delta)
+    assert after < before
+
+
+def test_error_is_higher_order():
+    """Prop 2.1: ||x~'+r-x'|| = o(||x~'-x'||) w.r.t. delta.
+
+    The before-error stays O(pert) as delta->0 while the after-error vanishes;
+    the after/before ratio must shrink roughly linearly with delta."""
+    deltas = [0.2, 0.1, 0.05, 0.025]
+    ratios = []
+    for d in deltas:
+        before, after = _errors(d)
+        ratios.append(after / before)
+    # monotone decreasing ratio, and ~order-1+ decay over an 8x delta range
+    assert all(b <= a * 1.1 for a, b in zip(ratios, ratios[1:]))
+    assert ratios[-1] < 0.35 * ratios[0]
+    assert ratios[-1] < 0.1  # near-eliminated at small delta

@@ -1,0 +1,58 @@
+"""Definition 2.4 properties of the reward surrogate (hypothesis-driven)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reward import reward, speedup_cont
+from repro.core.init_sequence import theorem_sequence
+
+
+def test_optimality():
+    assert reward([0.0]) == pytest.approx(1.0)
+
+
+@given(st.floats(0.05, 0.7), st.floats(0.05, 0.25))
+@settings(max_examples=30, deadline=None)
+def test_optimality_bound(t2, gap):
+    t3 = min(t2 + gap, 0.95)
+    r = reward([0.0, t2, t3]) if t2 < t3 else 1.0
+    if t2 < t3:
+        assert 0.0 < r < 1.0 + 1e-9  # strict in exact arithmetic
+
+
+@given(st.floats(0.1, 0.6))
+@settings(max_examples=20, deadline=None)
+def test_monotonicity_insertion(t_last):
+    """Inserting a middle core (same speedup) never hurts the reward."""
+    two = reward([0.0, t_last])
+    three = reward([0.0, t_last / 2, t_last])
+    assert three >= two - 1e-9
+
+
+@given(st.floats(0.2, 0.6), st.floats(0.05, 0.15))
+@settings(max_examples=20, deadline=None)
+def test_tradeoff(t_last, dt):
+    """Higher speedup (larger t_K) has lower best achievable reward."""
+    t_hi = min(t_last + dt, 0.9)
+    lo = max(reward([0.0, m * t_last, t_last]) for m in (0.3, 0.5, 0.7))
+    hi = max(reward([0.0, m * t_hi, t_hi]) for m in (0.3, 0.5, 0.7))
+    assert lo >= hi - 1e-9
+
+
+def test_theorem_25_argmax_matches_simulation():
+    """Grid-search the simulator's optimum; Theorem 2.5 formula must be
+    within the commensurate-grid neighborhood of it."""
+    for s in (2.5, 4.0):
+        t3 = (s - 1) / s
+        grid = np.linspace(0.02, t3 - 0.02, 150)
+        rw = [reward([0.0, float(t2), t3]) for t2 in grid]
+        best = grid[int(np.argmax(rw))]
+        theory = t3 / 2 if s <= 3 else 2 * t3 - 1
+        assert abs(best - theory) < 0.05
+
+
+def test_speedup_definition():
+    assert speedup_cont([0.0, 0.2, 0.4, 0.7]) == pytest.approx(10 / 3)
+    # theorem sequence hits its own target speedup
+    t = theorem_sequence(4, 10 / 3)
+    assert speedup_cont(t) == pytest.approx(10 / 3)

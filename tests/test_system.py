@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests: train a micro denoiser, sample it with CHORDS,
+serve it through the streaming engine, and check the paper's quality metric
+(latent RMSE vs the sequential oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (GaussianMixture, chords_sample, make_sequence,
+                        sequential_sample, uniform_tgrid)
+from repro.diffusion import diffusion_loss, init_wrapper, make_drift
+from repro.optim import AdamWConfig, apply_updates, init_state
+from repro.serve import ChordsEngine, Request
+
+
+@pytest.fixture(scope="module")
+def trained_denoiser():
+    """Train the micro-DiT wrapper on GMM data for a few hundred steps."""
+    cfg = get_config("chords-dit-xl", reduced=True)
+    gm = GaussianMixture.random(jax.random.PRNGKey(7), num_modes=4, dim=8)
+    params = init_wrapper(cfg, 8, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=200,
+                      weight_decay=0.0)
+    state = init_state(params, opt)
+
+    @jax.jit
+    def step(params, state, key):
+        k1, k2 = jax.random.split(key)
+        x1 = gm.sample_data(k1, 64).reshape(8, 8, 8)  # [B, S, L]
+        loss, grads = jax.value_and_grad(
+            lambda p: diffusion_loss(p, cfg, x1, k2))(params)
+        params, state, _ = apply_updates(params, grads, state, opt)
+        return params, state, loss
+
+    losses = []
+    key = jax.random.PRNGKey(1)
+    for i in range(200):
+        key, sub = jax.random.split(key)
+        params, state, loss = step(params, state, sub)
+        losses.append(float(loss))
+    assert np.mean(losses[-20:]) < 0.5 * np.mean(losses[:20])  # it learns
+    return cfg, params
+
+
+def test_chords_on_trained_denoiser(trained_denoiser):
+    cfg, params = trained_denoiser
+    drift = make_drift(params, cfg)
+    n = 50
+    tg = uniform_tgrid(n, 0.98)
+    x0 = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 8))
+    seq = np.asarray(sequential_sample(drift, x0, tg))
+    res = chords_sample(drift, x0, tg, make_sequence(8, n))
+    np.testing.assert_allclose(np.asarray(res.outputs[0]), seq, atol=1e-4)
+    scale = np.sqrt((seq**2).mean())
+    rmse_fast = np.sqrt(((np.asarray(res.outputs[-1]) - seq) ** 2).mean())
+    assert rmse_fast / scale < 0.05  # paper: no measurable degradation
+    assert res.speedup(7) > 2.9  # K=8 paper operating point
+
+
+def test_streaming_engine_serves_batches(trained_denoiser):
+    cfg, params = trained_denoiser
+    drift = make_drift(params, cfg)
+    tg = uniform_tgrid(50, 0.98)
+    engine = ChordsEngine(drift, latent_shape=(8, 8), n_steps=50, num_cores=8,
+                          tgrid=tg, max_batch=4, rtol=0.1)
+    for i in range(6):
+        engine.submit(Request(rid=i, key=jax.random.PRNGKey(i)))
+    done = []
+    while engine.queue:
+        done += engine.step()
+    assert len(done) == 6
+    assert all(np.isfinite(np.asarray(out.sample)).all() for _, out in done)
+    assert all(out.speedup >= 1.0 for _, out in done)
+    assert any(out.speedup > 1.5 for _, out in done)  # early exit engaged
