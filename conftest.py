@@ -1,0 +1,17 @@
+"""Repo-root pytest bootstrap: make ``import repro`` work without needing
+the ``PYTHONPATH=src`` prefix (the tier-1 command keeps working either way)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Container images without hypothesis fall back to a deterministic shim
+    # covering the small API surface the suite uses; CI installs the real one.
+    from repro.utils import hypothesis_fallback
+
+    hypothesis_fallback.install()

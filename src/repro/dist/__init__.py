@@ -1,0 +1,7 @@
+"""Distribution substrate: sharding rules, checkpointing, fault tolerance,
+and compressed collectives.
+
+Import submodules directly (``from repro.dist.sharding import shard_act``);
+this package namespace stays empty so importing ``repro.dist`` never pulls in
+jax device state.
+"""

@@ -1,0 +1,164 @@
+"""Atomic, checksummed, GC'd checkpoints for arbitrary pytrees.
+
+Layout per step (all-or-nothing via tmp-dir + rename):
+
+    <dir>/step_00000015/
+        leaf_00000.npy ... leaf_NNNNN.npy   one file per flattened leaf
+        MANIFEST                            json: step, per-leaf sha256 + dtype
+
+A step directory without a MANIFEST is a crashed partial write and is
+ignored. ``restore_latest`` walks complete steps newest-first and re-verifies
+every leaf's checksum, falling back to the previous step on any mismatch —
+a torn page on one host must not poison a 10k-chip restart.
+
+Leaves are stored as .npy. Dtypes numpy can't serialize (bfloat16 & friends)
+are widened to float32 on disk; restore casts every leaf back to the
+template's dtype, so round-trips are exact for values representable in both.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+MANIFEST = "MANIFEST"
+_STEP_FMT = "step_{:08d}"
+
+
+def _to_savable(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """(array numpy can np.save losslessly, original dtype string)."""
+    orig = str(arr.dtype)
+    if arr.dtype.kind not in "biufc":  # e.g. ml_dtypes bfloat16 -> kind 'V'
+        arr = arr.astype(np.float32)
+    return arr, orig
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._sweep_partial()
+
+    def _sweep_partial(self):
+        """Remove debris from hard crashes (SIGKILL/power loss mid-save):
+        leftover tmp dirs and step dirs that never got their MANIFEST.
+        Single-writer assumption: only the trainer process saves here."""
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if not os.path.isdir(path):
+                continue
+            stale_tmp = name.startswith(".tmp_save_")
+            torn_step = name.startswith("step_") and \
+                not os.path.isfile(os.path.join(path, MANIFEST))
+            if stale_tmp or torn_step:
+                shutil.rmtree(path, ignore_errors=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, state: Any, step: int) -> str:
+        import jax
+
+        leaves, _ = jax.tree_util.tree_flatten(state)
+        self._sweep_partial()
+        tmp = tempfile.mkdtemp(prefix=".tmp_save_", dir=self.dir)
+        manifest = {"step": int(step), "num_leaves": len(leaves), "leaves": []}
+        try:
+            for i, leaf in enumerate(leaves):
+                arr, orig_dtype = _to_savable(np.asarray(leaf))
+                name = f"leaf_{i:05d}.npy"
+                path = os.path.join(tmp, name)
+                np.save(path, arr)
+                manifest["leaves"].append(
+                    {"file": name, "dtype": orig_dtype,
+                     "shape": list(arr.shape), "sha256": _sha256(path)})
+            mpath = os.path.join(tmp, MANIFEST)
+            with open(mpath, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            final = os.path.join(self.dir, _STEP_FMT.format(int(step)))
+            if os.path.exists(final):  # re-save of the same step
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self._complete_steps()
+        for step in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, _STEP_FMT.format(step)),
+                          ignore_errors=True)
+
+    # -- discovery ------------------------------------------------------------
+
+    def _complete_steps(self):
+        """Ascending step numbers whose directory holds a MANIFEST."""
+        out = []
+        for name in os.listdir(self.dir):
+            if not name.startswith("step_"):
+                continue
+            try:
+                step = int(name[len("step_"):])
+            except ValueError:
+                continue
+            if os.path.isfile(os.path.join(self.dir, name, MANIFEST)):
+                out.append(step)
+        return sorted(out)
+
+    # -- restore --------------------------------------------------------------
+
+    def _load_step(self, template: Any, step: int) -> Any:
+        import jax
+
+        d = os.path.join(self.dir, _STEP_FMT.format(step))
+        with open(os.path.join(d, MANIFEST)) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        if manifest["num_leaves"] != len(leaves):
+            raise ValueError(
+                f"step {step}: {manifest['num_leaves']} leaves on disk, "
+                f"template has {len(leaves)}")
+        out = []
+        for entry, ref in zip(manifest["leaves"], leaves):
+            path = os.path.join(d, entry["file"])
+            if _sha256(path) != entry["sha256"]:
+                raise IOError(f"checksum mismatch in {path}")
+            arr = np.load(path)
+            out.append(_cast_like(arr, ref))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, template: Any
+                       ) -> Optional[Tuple[Any, int]]:
+        """(state, step) from the newest verifiable checkpoint, else None."""
+        for step in reversed(self._complete_steps()):
+            try:
+                return self._load_step(template, step), step
+            except Exception:
+                continue  # corrupted / torn step: fall back to the previous
+        return None
+
+
+def _cast_like(arr: np.ndarray, ref) -> Any:
+    import jax.numpy as jnp
+
+    dtype = getattr(ref, "dtype", None)
+    if dtype is None:
+        return arr
+    return jnp.asarray(arr).astype(dtype)

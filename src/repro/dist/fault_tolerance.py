@@ -1,0 +1,139 @@
+"""Heartbeats, straggler detection, and elastic re-mesh planning.
+
+The trainer beats once per step per worker. ``stragglers`` flags workers
+whose mean step time is an outlier against the fleet median (CHORDS-style
+lockstep rounds run at the speed of the slowest core, so one slow host drags
+the whole mesh). ``dead_workers`` is a pure timeout check with an injectable
+clock for tests. ``plan_elastic_mesh`` answers "a host died — what is the
+largest healthy mesh we can restart on?": model parallelism is fixed by the
+checkpoint layout, so only the data axis shrinks, and it shrinks to a power
+of two so collective rings stay balanced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, num_workers: int, timeout_s: float = 60.0,
+                 straggler_factor: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.num_workers = num_workers
+        self.timeout_s = timeout_s
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        self._start = clock()
+        self._last_beat: Dict[int, float] = {}
+        self._last_step: Dict[int, int] = {}
+        self._dur_sum: Dict[int, float] = {}
+        self._dur_n: Dict[int, int] = {}
+        self._marked_dead: set = set()
+
+    def beat(self, worker: int, step: int, duration_s: float):
+        now = self.clock()
+        self._last_beat[worker] = now
+        self._last_step[worker] = step
+        self._dur_sum[worker] = self._dur_sum.get(worker, 0.0) + duration_s
+        self._dur_n[worker] = self._dur_n.get(worker, 0) + 1
+
+    def _mean_durations(self, dead) -> Dict[int, float]:
+        return {w: self._dur_sum[w] / self._dur_n[w]
+                for w in self._dur_sum if w not in dead}
+
+    def stragglers(self) -> List[int]:
+        """Live workers whose mean step time exceeds factor x fleet median.
+
+        Dead workers (marked or timed out) are excluded from both the
+        candidates and the median, so their stale history cannot anchor it.
+        """
+        means = self._mean_durations(set(self.dead_workers()))
+        if len(means) < 2:
+            return []
+        vals = sorted(means.values())
+        median = vals[len(vals) // 2] if len(vals) % 2 else \
+            0.5 * (vals[len(vals) // 2 - 1] + vals[len(vals) // 2])
+        if median <= 0:
+            return []
+        return sorted(w for w, m in means.items()
+                      if m > self.straggler_factor * median)
+
+    def dead_workers(self) -> List[int]:
+        """Workers marked dead or silent for longer than the timeout.
+
+        A worker that has never beaten counts its silence from monitor
+        creation, so a freshly started fleet is not declared dead at t=0.
+        """
+        now = self.clock()
+        out = set(self._marked_dead)
+        for w in range(self.num_workers):
+            last = self._last_beat.get(w, self._start)
+            if now - last > self.timeout_s:
+                out.add(w)
+        return sorted(out)
+
+    def mark_dead(self, worker: int):
+        self._marked_dead.add(worker)
+
+    def alive_count(self) -> int:
+        return self.num_workers - len(self._marked_dead)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticMeshPlan:
+    shape: Tuple[int, ...]          # (pod, data, model)
+    axes: Tuple[str, ...]
+    alive_hosts: int
+    idle_devices: int               # healthy chips the plan leaves unused
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_parallel(self) -> int:
+        return self.shape[0] * self.shape[1]
+
+    @property
+    def model_parallel(self) -> int:
+        return self.shape[2]
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def plan_elastic_mesh(total_hosts: int, dead_hosts: int,
+                      chips_per_host: int = 4,
+                      model_parallel: int = 16,
+                      max_data: int = 16) -> ElasticMeshPlan:
+    """Largest healthy (pod, data, model) mesh after ``dead_hosts`` losses.
+
+    The model axis is pinned (checkpoint layout); total data-parallel ways
+    shrink to the largest power of two that the surviving chips support.
+    ``data`` caps at ``max_data`` (the within-pod ring); the remaining
+    power-of-two factor becomes the pod axis.
+    """
+    alive = total_hosts - dead_hosts
+    if alive <= 0:
+        raise RuntimeError(
+            f"no alive hosts ({dead_hosts}/{total_hosts} dead)")
+    chips = alive * chips_per_host
+    dp_total = chips // model_parallel
+    if dp_total < 1:
+        raise RuntimeError(
+            f"{chips} chips cannot host model_parallel={model_parallel}")
+    dp = _pow2_floor(dp_total)
+    data = min(dp, max_data)
+    pod = dp // data
+    shape = (pod, data, model_parallel)
+    used = pod * data * model_parallel
+    return ElasticMeshPlan(shape=shape, axes=("pod", "data", "model"),
+                           alive_hosts=alive, idle_devices=chips - used)

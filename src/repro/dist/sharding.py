@@ -1,0 +1,230 @@
+"""Logical-axis sharding: rule tables + divisibility-aware spec builder.
+
+Models and steps name tensor dims with *logical* axes ("embed", "heads",
+"batch", ...; see ``repro.utils.pspec`` and README.md in this package). A rule
+table maps each logical axis to a mesh axis (or a tuple of mesh axes, or None
+for replicated). :class:`ShardingCtx` turns (logical_axes, shape) into a
+``PartitionSpec`` with two hard guarantees:
+
+* a mesh axis is used at most once per tensor (first dim in rule order wins);
+* when a shape is given, a dim is only sharded if its size divides the mesh
+  axis size — otherwise the displaced mesh axis falls back to another dim of
+  the same tensor via ``FALLBACKS`` (40 heads on a 16-way model axis move TP
+  to head_dim; a batch-1 decode cache puts the data axis on kv_seq).
+
+``shard_act`` is the in-model annotation hook: inside a ``use_sharding``
+context it lowers to ``with_sharding_constraint``; outside any context it is
+a strict no-op, so single-device tests and the vmapped CHORDS round (whose
+cores->data carry sharding conflicts with rank-blind interior constraints)
+pay nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+Rule = Union[str, Tuple[str, ...], None]
+Rules = Dict[str, Rule]
+
+# --- rule tables -------------------------------------------------------------
+
+# Training: FSDP over 'data' on the widest param dim (embed), TP over 'model'
+# for heads/ffn/vocab, batch data-parallel across pod x data. Optimizer state
+# mirrors the param tree so the same table applies (ZeRO-3).
+TRAIN_RULES: Rules = {
+    # params
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "layers": None,
+    "mem": "model",
+    "state": None,
+    "conv": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed_act": None,
+    "groups": "data",
+    "cores": None,
+}
+
+# Serving: pure TP for params (no FSDP gather on the forward hot path);
+# requests ride 'data'. CHORDS cores ride 'data' too — in the lockstep round
+# the cores dim comes first, so it wins the data axis and per-request batch
+# stays local to a core.
+SERVE_RULES: Rules = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",
+    "layers": None,
+    "mem": "model",
+    "state": None,
+    "conv": None,
+    "batch": "data",
+    "seq": None,
+    "kv_seq": None,
+    "embed_act": None,
+    "groups": "data",
+    "cores": "data",
+}
+
+# FSDP over the layers-stacked dim instead of embed: cheaper all-gather
+# schedule for deep-narrow archs (dryrun variant 'fsdplayers').
+TRAIN_LAYERS_FSDP_RULES: Rules = dict(
+    TRAIN_RULES, layers="data", embed=None)
+
+# Deep TP for decode (dryrun variant 'deeptp'): the model axis goes to the
+# stacked layers dim, trading per-layer collectives for layer-pipelining;
+# heads/ffn of stacked params replicate within a layer group.
+SERVE_DEEP_TP_RULES: Rules = dict(SERVE_RULES, layers="model")
+
+# Where a displaced mesh axis may land, in preference order. Only dims that
+# are still unsharded and pass the divisibility check are eligible.
+FALLBACKS: Dict[str, Tuple[str, ...]] = {
+    "model": ("head_dim", "ffn", "kv_seq"),
+    "data": ("kv_seq", "seq", "layers"),
+    "pod": (),
+}
+
+
+def _as_tuple(rule: Rule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def _normalize(entry: Tuple[str, ...]):
+    if not entry:
+        return None
+    if len(entry) == 1:
+        return entry[0]
+    return entry
+
+
+class ShardingCtx:
+    """Binds a mesh to a rule table and builds PartitionSpecs/shardings."""
+
+    def __init__(self, mesh, rules: Rules):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    # -- spec construction ----------------------------------------------------
+
+    def pspec(self, axes: Sequence[Optional[str]],
+              shape: Optional[Sequence[int]] = None):
+        """PartitionSpec for a tensor with the given logical axes.
+
+        ``shape`` enables the divisibility fallback; without it every rule is
+        assumed to divide (dry-run structs always pass shapes).
+        """
+        from jax.sharding import PartitionSpec
+
+        mesh_axes = tuple(self.mesh.axis_names)
+        axis_size = dict(self.mesh.shape)
+        used: set = set()
+        entries = [() for _ in axes]
+        displaced = []  # mesh axes whose preferred dim failed divisibility
+
+        for i, name in enumerate(axes):
+            want = [a for a in _as_tuple(self.rules.get(name))
+                    if a in mesh_axes and a not in used]
+            if not want:
+                continue
+            ways = math.prod(axis_size[a] for a in want)
+            if shape is not None and int(shape[i]) % ways != 0:
+                displaced.extend(want)
+                continue
+            entries[i] = tuple(want)
+            used.update(want)
+
+        for mesh_axis in displaced:
+            if mesh_axis in used:
+                continue
+            for target in FALLBACKS.get(mesh_axis, ()):
+                hit = False
+                for i, name in enumerate(axes):
+                    if name != target or entries[i]:
+                        continue
+                    if shape is not None and \
+                            int(shape[i]) % axis_size[mesh_axis] != 0:
+                        continue
+                    entries[i] = (mesh_axis,)
+                    used.add(mesh_axis)
+                    hit = True
+                    break
+                if hit:
+                    break
+
+        return PartitionSpec(*[_normalize(e) for e in entries])
+
+    def sharding(self, axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None):
+        from jax.sharding import NamedSharding
+
+        return NamedSharding(self.mesh, self.pspec(axes, shape))
+
+
+def tree_shardings(axes_tree: Any, mesh, rules: Rules,
+                   struct_tree: Any = None) -> Any:
+    """Map a tree of logical-axis tuples to NamedShardings.
+
+    ``struct_tree`` (matching tree of arrays / ShapeDtypeStructs) supplies
+    shapes for the divisibility fallback.
+    """
+    import jax
+
+    ctx = ShardingCtx(mesh, rules)
+    is_leaf = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    if struct_tree is None:
+        return jax.tree_util.tree_map(lambda ax: ctx.sharding(ax), axes_tree,
+                                      is_leaf=is_leaf)
+    return jax.tree_util.tree_map(
+        lambda ax, st: ctx.sharding(ax, tuple(st.shape)), axes_tree,
+        struct_tree, is_leaf=is_leaf)
+
+
+# --- ambient context ---------------------------------------------------------
+
+_local = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_local, "stack", [None])[-1]
+
+
+@contextlib.contextmanager
+def use_sharding(mesh, rules: Rules):
+    """Activate (mesh, rules) so ``shard_act`` constrains activations."""
+    stack = getattr(_local, "stack", None)
+    if stack is None:
+        stack = _local.stack = [None]
+    stack.append(ShardingCtx(mesh, rules))
+    try:
+        yield stack[-1]
+    finally:
+        stack.pop()
+
+
+def shard_act(x, logical_axes: Sequence[Optional[str]]):
+    """Constrain an activation to the ambient rules; no-op outside a context."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    import jax
+
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(logical_axes, tuple(x.shape)))

@@ -40,12 +40,18 @@ def lr_at(cfg: AdamWConfig, step):
     return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
 
 
+def _master_copy(p):
+    # Unconditional cast+copy: fp32 params must not alias w32, or donating
+    # both to the jitted step donates the same buffer twice.
+    return jnp.array(p, dtype=jnp.float32, copy=True)
+
+
 def init_state(params: Tree, cfg: AdamWConfig) -> dict:
     f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
     state = {
         "m": jax.tree_util.tree_map(f32, params),
         "v": jax.tree_util.tree_map(f32, params),
-        "w32": jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params),
+        "w32": jax.tree_util.tree_map(_master_copy, params),
         "step": jnp.zeros((), jnp.int32),
     }
     if cfg.compress_grads:

@@ -1,4 +1,8 @@
-"""ParaDIGMS / SRDS baselines: convergence to the sequential oracle."""
+"""ParaDIGMS / SRDS baselines: convergence to the sequential oracle.
+
+Default tests run on a shrunken grid (N_FAST steps) to keep the tier-1 suite
+fast; the paper-size N=50 cases are duplicated under the ``slow`` marker.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,22 +11,30 @@ import pytest
 from repro.core import (GaussianMixture, paradigms_sample, sequential_sample,
                         srds_sample, uniform_tgrid)
 
+N_FAST = 32
+N_FULL = 50
 
-@pytest.fixture(scope="module")
-def setup():
+
+def _make_setup(n):
     gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=4, dim=8)
-    tg = uniform_tgrid(50, 0.98)
+    tg = uniform_tgrid(n, 0.98)
     x0 = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
     seq = np.asarray(sequential_sample(gm.drift, x0, tg))
     return gm, tg, x0, seq
 
 
+@pytest.fixture(scope="module")
+def setup():
+    return _make_setup(N_FAST)
+
+
 def test_paradigms_converges(setup):
     gm, tg, x0, seq = setup
+    n = int(tg.shape[0]) - 1
     res = paradigms_sample(gm.drift, x0, tg, window=8, tol=1e-4)
     rmse = np.sqrt(((np.asarray(res.output) - seq) ** 2).mean())
     assert rmse < 1e-2
-    assert res.rounds < 50  # actually parallelizes
+    assert res.rounds < n  # actually parallelizes
     assert res.speedup > 1.0
 
 
@@ -33,16 +45,37 @@ def test_paradigms_speedup_grows_with_window(setup):
     assert r8.rounds <= r4.rounds
 
 
-def test_srds_exact_at_convergence(setup):
-    gm, tg, x0, seq = setup
-    res = srds_sample(gm.drift, x0, tg, num_segments=5, tol=1e-6, max_iters=5)
+@pytest.fixture(scope="module")
+def srds_setup():
+    # srds_sample jit-compiles one fine solver per segment per call; a short
+    # grid keeps those compiles (the test's real cost) small.
+    return _make_setup(24)
+
+
+def test_srds_exact_at_convergence(srds_setup):
+    gm, tg, x0, seq = srds_setup
+    res = srds_sample(gm.drift, x0, tg, num_segments=4, tol=1e-6, max_iters=4)
     rmse = np.sqrt(((np.asarray(res.output) - seq) ** 2).mean())
     assert rmse < 1e-3  # parareal converges to the fine solution
 
 
-def test_srds_early_stop_fewer_rounds(setup):
-    gm, tg, x0, _ = setup
-    tight = srds_sample(gm.drift, x0, tg, num_segments=5, tol=1e-7)
-    loose = srds_sample(gm.drift, x0, tg, num_segments=5, tol=5e-2)
+def test_srds_early_stop_fewer_rounds(srds_setup):
+    gm, tg, x0, _ = srds_setup
+    tight = srds_sample(gm.drift, x0, tg, num_segments=4, tol=1e-7)
+    loose = srds_sample(gm.drift, x0, tg, num_segments=4, tol=5e-2)
     assert loose.rounds <= tight.rounds
     assert loose.iters <= tight.iters
+
+
+@pytest.mark.slow
+def test_baselines_full_grid():
+    """Paper-size N=50 versions of the convergence checks."""
+    gm, tg, x0, seq = _make_setup(N_FULL)
+    res = paradigms_sample(gm.drift, x0, tg, window=8, tol=1e-4)
+    assert np.sqrt(((np.asarray(res.output) - seq) ** 2).mean()) < 1e-2
+    assert res.rounds < N_FULL and res.speedup > 1.0
+    res = srds_sample(gm.drift, x0, tg, num_segments=5, tol=1e-6, max_iters=5)
+    assert np.sqrt(((np.asarray(res.output) - seq) ** 2).mean()) < 1e-3
+    tight = srds_sample(gm.drift, x0, tg, num_segments=5, tol=1e-7)
+    loose = srds_sample(gm.drift, x0, tg, num_segments=5, tol=5e-2)
+    assert loose.rounds <= tight.rounds and loose.iters <= tight.iters

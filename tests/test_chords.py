@@ -15,15 +15,24 @@ def gmm():
     return GaussianMixture.random(jax.random.PRNGKey(0), num_modes=4, dim=8)
 
 
-def test_slowest_core_equals_sequential(gmm):
-    """Paper: 'the last output is guaranteed identical to no-acceleration'."""
+def _check_slowest_core(gmm, ks):
     n = 50
     tg = uniform_tgrid(n, 0.98)
     x0 = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
     seq = sequential_sample(gmm.drift, x0, tg)
-    for k in (2, 4, 6, 8):
+    for k in ks:
         res = chords_sample(gmm.drift, x0, tg, make_sequence(k, n))
         np.testing.assert_allclose(res.outputs[0], seq, atol=1e-5)
+
+
+def test_slowest_core_equals_sequential(gmm):
+    """Paper: 'the last output is guaranteed identical to no-acceleration'."""
+    _check_slowest_core(gmm, (2, 8))
+
+
+@pytest.mark.slow
+def test_slowest_core_equals_sequential_full_sweep(gmm):
+    _check_slowest_core(gmm, (2, 4, 6, 8))
 
 
 def test_error_decreases_slow_to_fast(gmm):
@@ -42,10 +51,7 @@ def test_error_decreases_slow_to_fast(gmm):
     assert rmse[-1] / scale < 0.02
 
 
-def test_rectification_beats_no_communication(gmm):
-    """CHORDS fast output must beat the same-schedule solver without
-    rectification (pure coarse-start Euler)."""
-    n = 50
+def _check_beats_no_communication(gmm, n):
     tg = uniform_tgrid(n, 0.98)
     x0 = jax.random.normal(jax.random.PRNGKey(3), (8, 8))
     seq = np.asarray(sequential_sample(gmm.drift, x0, tg))
@@ -61,6 +67,17 @@ def test_rectification_beats_no_communication(gmm):
     err_solo = np.sqrt(((np.asarray(x) - seq) ** 2).mean())
     err_chords = np.sqrt(((np.asarray(res.outputs[-1]) - seq) ** 2).mean())
     assert err_chords < err_solo * 0.5
+
+
+def test_rectification_beats_no_communication(gmm):
+    """CHORDS fast output must beat the same-schedule solver without
+    rectification (pure coarse-start Euler)."""
+    _check_beats_no_communication(gmm, n=30)
+
+
+@pytest.mark.slow
+def test_rectification_beats_no_communication_full_grid(gmm):
+    _check_beats_no_communication(gmm, n=50)
 
 
 def test_speedups_match_paper_formula():

@@ -1,0 +1,25 @@
+"""Every module under src/repro/ must import cleanly.
+
+A missing submodule (like the once-absent ``repro.dist``) otherwise surfaces
+as opaque collection errors across half the suite; this test names the broken
+module directly.
+"""
+import importlib
+import pkgutil
+
+import repro
+
+
+def test_import_every_repro_module():
+    failures = []
+
+    def onerror(name):
+        failures.append(f"{name}: walk error")
+
+    for info in pkgutil.walk_packages(repro.__path__, prefix="repro.",
+                                      onerror=onerror):
+        try:
+            importlib.import_module(info.name)
+        except Exception as e:  # report them all, not just the first
+            failures.append(f"{info.name}: {type(e).__name__}: {e}")
+    assert not failures, "unimportable modules:\n" + "\n".join(failures)

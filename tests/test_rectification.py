@@ -8,20 +8,22 @@ from repro.core.ode import GaussianMixture
 from repro.core.rectify import rectify_delta
 
 
-def _fine_solve(drift, x, t0, t1, steps=400):
+def _fine_solve(drift, x, t0, t1, steps=160):
     tg = jnp.linspace(t0, t1, steps + 1)
-    for i in range(steps):
-        x = x + (tg[i + 1] - tg[i]) * drift(x, tg[i])
-    return x
+
+    def body(i, x):
+        return x + (tg[i + 1] - tg[i]) * drift(x, tg[i])
+
+    return jax.lax.fori_loop(0, steps, body, x)
 
 
-def _errors(delta, pert=0.05):
+def _errors(delta, pert=0.05, steps=160):
     gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=3, dim=4)
     t = 0.3
     x_t = jax.random.normal(jax.random.PRNGKey(1), (6, 4))
     x_tilde = x_t + pert * jax.random.normal(jax.random.PRNGKey(2), (6, 4))
-    x_next = _fine_solve(gm.drift, x_t, t, t + delta)
-    xt_next = _fine_solve(gm.drift, x_tilde, t, t + delta)
+    x_next = _fine_solve(gm.drift, x_t, t, t + delta, steps=steps)
+    xt_next = _fine_solve(gm.drift, x_tilde, t, t + delta, steps=steps)
     r = rectify_delta(x_t, gm.drift(x_t, t), x_tilde, gm.drift(x_tilde, t),
                       delta)
     before = float(jnp.linalg.norm(xt_next - x_next))
@@ -49,3 +51,15 @@ def test_error_is_higher_order():
     assert all(b <= a * 1.1 for a, b in zip(ratios, ratios[1:]))
     assert ratios[-1] < 0.35 * ratios[0]
     assert ratios[-1] < 0.1  # near-eliminated at small delta
+
+
+@pytest.mark.slow
+def test_error_is_higher_order_full_grid():
+    """Same decay law with the full-resolution (400-step) fine solver."""
+    ratios = []
+    for d in [0.2, 0.1, 0.05, 0.025]:
+        before, after = _errors(d, steps=400)
+        ratios.append(after / before)
+    assert all(b <= a * 1.1 for a, b in zip(ratios, ratios[1:]))
+    assert ratios[-1] < 0.35 * ratios[0]
+    assert ratios[-1] < 0.1
