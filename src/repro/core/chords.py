@@ -32,6 +32,7 @@ class ChordsResult:
     outputs: jax.Array  # [K, ...] core outputs, index 0 = slowest = sequential
     emit_rounds: np.ndarray  # [K] 1-based lockstep round of each output
     n_steps: int
+    trace: Optional[jax.Array] = None  # [N, K, ...] latent per round (opt-in)
 
     def speedup(self, k: int) -> float:
         """Paper speedup metric for accepting core k's (0-based) output."""
@@ -116,14 +117,12 @@ def chords_sample(
     (xf, _, _, _, finals), trace = jax.lax.scan(
         round_body, init, jnp.arange(1, n + 1)
     )
-    result = ChordsResult(
+    return ChordsResult(
         outputs=finals,
         emit_rounds=scheduler.emit_rounds(list(i_seq), n),
         n_steps=n,
+        trace=trace if collect_trace else None,
     )
-    if collect_trace:
-        result.trace = trace  # [N, K, ...] latent per round
-    return result
 
 
 def select_output(result: ChordsResult, rtol: float = 0.05):

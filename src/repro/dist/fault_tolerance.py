@@ -16,6 +16,20 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 
+class WorkerLost(RuntimeError):
+    """Raised out of the training loop when the heartbeat monitor declares
+    workers dead. Carries enough for the launcher to run the elastic dance:
+    mark dead -> ``plan_elastic_mesh`` -> restore checkpoint onto the new
+    mesh -> rebalance the data-pipeline host split -> resume."""
+
+    def __init__(self, workers, step: Optional[int] = None, history=None):
+        self.workers = sorted(set(workers))
+        self.step = step
+        self.history = list(history) if history else []  # pre-failure metrics
+        at = f" at step {step}" if step is not None else ""
+        super().__init__(f"workers {self.workers} lost{at}")
+
+
 class HeartbeatMonitor:
     def __init__(self, num_workers: int, timeout_s: float = 60.0,
                  straggler_factor: float = 2.0,
@@ -101,6 +115,20 @@ class ElasticMeshPlan:
     @property
     def model_parallel(self) -> int:
         return self.shape[2]
+
+
+def survivor_split(total_hosts: int, dead) -> Dict[int, int]:
+    """Contiguous re-indexing of surviving hosts: {old_host: new_index}.
+
+    After host loss the data pipeline's ``(host_index, host_count)`` split
+    must stay gapless — survivors keep their relative order and compact down
+    so every global-batch row is still produced exactly once.
+    """
+    dead = set(dead)
+    alive = [h for h in range(total_hosts) if h not in dead]
+    if not alive:
+        raise RuntimeError(f"no alive hosts ({sorted(dead)} all dead)")
+    return {h: i for i, h in enumerate(alive)}
 
 
 def _pow2_floor(n: int) -> int:

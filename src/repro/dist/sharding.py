@@ -176,6 +176,63 @@ class ShardingCtx:
 
         return NamedSharding(self.mesh, self.pspec(axes, shape))
 
+    def shard_spec(self, axes: Sequence[Optional[str]],
+                   shape: Sequence[int]
+                   ) -> Tuple[Tuple[Tuple[str, ...], ...], Tuple[int, ...]]:
+        """(per-dim mesh-axis tuples, per-dim shard counts) for checkpointing.
+
+        The grid is derived from the same pspec ``use_sharding`` would apply,
+        so shard files on disk line up one-to-one with the device-local
+        blocks each host holds.
+        """
+        p = self.pspec(axes, tuple(shape))
+        entries = normalize_spec(p, len(shape))
+        return entries, shard_grid(entries, dict(self.mesh.shape), shape)
+
+
+# --- pspec -> shard grid (sharded checkpointing) ------------------------------
+
+def normalize_spec(spec, rank: int) -> Tuple[Tuple[str, ...], ...]:
+    """PartitionSpec (or any per-dim sequence) -> per-dim mesh-axis tuples,
+    padded with replicated dims up to ``rank``."""
+    entries = [_as_tuple(e) for e in spec]
+    entries += [()] * (rank - len(entries))
+    return tuple(entries[:rank])
+
+
+def shard_grid(entries: Sequence[Tuple[str, ...]],
+               axis_sizes: Dict[str, int],
+               shape: Sequence[int]) -> Tuple[int, ...]:
+    """Per-dim shard counts for a tensor partitioned as ``entries``.
+
+    A dim whose size the mesh product does not divide is stored unsharded
+    (grid 1) — mirrors the pspec divisibility guarantee, but re-checked here
+    so a hand-built spec can never produce ragged shard files.
+    """
+    grid = []
+    for e, dim in zip(entries, shape):
+        ways = math.prod(axis_sizes.get(a, 1) for a in e)
+        grid.append(ways if ways > 0 and int(dim) % ways == 0 else 1)
+    return tuple(grid)
+
+
+def shard_slices(grid: Sequence[int], shape: Sequence[int]):
+    """Yield (linear_index, slice_tuple) over the shard grid in C order."""
+    import itertools
+
+    blocks = [int(d) // g for d, g in zip(shape, grid)]
+    for j, idx in enumerate(itertools.product(*[range(g) for g in grid])):
+        yield j, tuple(slice(i * b, (i + 1) * b)
+                       for i, b in zip(idx, blocks))
+
+
+def mesh_desc(mesh) -> Dict[str, Any]:
+    """JSON-serializable {axes, shape} of a mesh (records what a checkpoint
+    was saved under; works for any object exposing axis_names + shape)."""
+    axes = list(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    return {"axes": axes, "shape": [int(sizes[a]) for a in axes]}
+
 
 def tree_shardings(axes_tree: Any, mesh, rules: Rules,
                    struct_tree: Any = None) -> Any:

@@ -1,29 +1,179 @@
-"""Distributed training launcher.
+"""Distributed training launcher with elastic restart.
 
 Builds the sharded train step for (arch, mesh), wires the data pipeline,
-checkpoint manager, heartbeat monitor and elastic re-mesh handler, and runs
-the loop. On this CPU container use --reduced + a tiny mesh; on a real
-cluster the same script runs under multihost jax.distributed.
+sharded checkpoint manager, heartbeat monitor, and runs a *resumable* loop:
+when the monitor declares workers dead the trainer raises ``WorkerLost``,
+and this launcher re-plans the mesh (``plan_elastic_mesh``), restores the
+latest sharded checkpoint onto it, rebalances the data-pipeline host split
+over the survivors, and re-enters the loop. On this CPU container use
+--reduced + a tiny mesh; on a real cluster the same script runs under
+multihost jax.distributed.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --reduced \
       --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Demonstrate the elastic dance end-to-end (kills fake host 1 at step 20,
+shrinks the fleet, resumes from the last sharded checkpoint):
+
+  ... --hosts 2 --ckpt-dir /tmp/ckpt --simulate-dead-at 20
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import DataPipeline
-from repro.dist.fault_tolerance import HeartbeatMonitor, plan_elastic_mesh
-from repro.dist.sharding import TRAIN_RULES, ShardingCtx, use_sharding
+from repro.dist.fault_tolerance import (HeartbeatMonitor, WorkerLost,
+                                        plan_elastic_mesh, survivor_split)
+from repro.dist.sharding import (TRAIN_RULES, ShardingCtx, tree_shardings,
+                                 use_sharding)
 from repro.models import api as model_api
-from repro.optim import AdamWConfig, init_state
+from repro.optim import AdamWConfig, init_state, state_axes
 from repro.train import TrainLoopConfig, train_loop
 from repro.train.train_step import make_train_step
 from repro.utils import pspec
+
+
+class FailureInjector(HeartbeatMonitor):
+    """Heartbeat monitor that declares one worker dead at a given step —
+    drives the elastic-restart path without needing a real host to die."""
+
+    def __init__(self, num_workers: int, dead_at=None, dead_worker: int = 1,
+                 **kw):
+        kw.setdefault("timeout_s", float("inf"))  # deaths only via injection
+        super().__init__(num_workers, **kw)
+        self._dead_at = dead_at
+        self._dead_worker = dead_worker
+
+    def beat(self, worker: int, step: int, duration_s: float):
+        super().beat(worker, step, duration_s)
+        if self._dead_at is not None and step + 1 >= self._dead_at:
+            self.mark_dead(self._dead_worker)
+            self._dead_at = None
+
+
+def _merge_history(entries):
+    """Last write wins for rewound steps: a restart replays everything since
+    the restored checkpoint, so drop a pre-failure entry whenever a later
+    attempt re-ran its step (or an earlier one)."""
+    out = []
+    lo = None
+    for e in reversed(entries):
+        if lo is None or e["step"] < lo:
+            out.append(e)
+            lo = e["step"]
+    out.reverse()
+    return out
+
+
+def _build_state_axes(cfg, opt_cfg):
+    """Logical-axes tree mirroring the {"params", "opt"} checkpoint state."""
+    ax = pspec.logical_axes(model_api.model_specs(cfg))
+    return {"params": ax, "opt": state_axes(ax, opt_cfg)}
+
+
+def elastic_train(cfg, params, pipe, opt_cfg, loop_cfg, *, step_factory,
+                  mesh_shape=None, total_hosts=1, chips_per_host=1,
+                  monitor_factory=None, log_fn=print, max_restarts=4):
+    """The resumable loop: train until done or out of healthy hosts.
+
+    ``mesh_shape`` is (data, model) or None for single-device.
+    ``step_factory(data_parallel)`` builds the jitted train step for the
+    current data-parallel ways — rebuilt per attempt because step internals
+    (MoE ``num_groups``) must track the shrunken mesh. Each attempt also
+    gets a fresh monitor for the current fleet (a new incarnation must not
+    inherit tombstones from the previous one).
+    """
+    from repro.launch.mesh import make_mesh
+
+    # single-process fleets: only worker 0 ever beats, so wall-clock
+    # timeouts would spuriously declare the simulated hosts dead — deaths
+    # arrive via mark_dead only (a KV-backed monitor replaces this on a
+    # real fleet; see ROADMAP)
+    monitor_factory = monitor_factory or (
+        lambda n: HeartbeatMonitor(num_workers=n, timeout_s=float("inf")))
+    ckpt_axes = _build_state_axes(cfg, opt_cfg)
+    dead_total: set = set()
+    my_host = 0  # this process's id in the *original* fleet numbering
+    past_history = []  # metrics from attempts that ended in WorkerLost
+
+    for attempt in range(max_restarts + 1):
+        alive = total_hosts - len(dead_total)
+        mesh = ctx = None
+        if mesh_shape is not None:
+            d, m = mesh_shape
+            if dead_total:
+                plan = plan_elastic_mesh(
+                    total_hosts, len(dead_total),
+                    chips_per_host=chips_per_host, model_parallel=m,
+                    max_data=max(1, d))
+                d = plan.data_parallel
+                log_fn(f"[launch] elastic plan after losing "
+                       f"{sorted(dead_total)}: mesh=({d},{m}) "
+                       f"idle={plan.idle_devices}")
+            mesh = make_mesh((d, m), ("data", "model"))
+            ctx = ShardingCtx(mesh, TRAIN_RULES)
+            params = jax.device_put(
+                params, tree_shardings(ckpt_axes["params"], mesh,
+                                       TRAIN_RULES, params))
+        monitor = monitor_factory(alive)
+        step_fn = step_factory(d if mesh_shape is not None else 1)
+        try:
+            if ctx is not None:
+                with use_sharding(mesh, TRAIN_RULES):
+                    p, o, hist = train_loop(
+                        cfg, params, pipe, opt_cfg, loop_cfg,
+                        train_step=step_fn, monitor=monitor, log_fn=log_fn,
+                        sharding_ctx=ctx, state_axes=ckpt_axes)
+            else:
+                p, o, hist = train_loop(cfg, params, pipe, opt_cfg, loop_cfg,
+                                        train_step=step_fn, monitor=monitor,
+                                        log_fn=log_fn)
+            return p, o, _merge_history(past_history + hist)
+        except WorkerLost as e:
+            past_history.extend(e.history)
+            # dead worker ids are indices into the *current* incarnation;
+            # map them back to original host ids before compacting
+            survivors = [h for h in range(total_hosts) if h not in dead_total]
+            unknown = [w for w in e.workers if w >= len(survivors)]
+            if unknown:
+                raise RuntimeError(
+                    f"WorkerLost reported worker ids {unknown} outside the "
+                    f"{len(survivors)}-host fleet (bad --simulate-dead-"
+                    f"worker?)") from e
+            newly_dead = {survivors[w] for w in e.workers}
+            dead_total |= newly_dead
+            log_fn(f"[launch] {e}; hosts {sorted(newly_dead)} lost "
+                   f"({total_hosts - len(dead_total)}/{total_hosts} alive)")
+            # all bookkeeping stays in original host ids; only the pipeline
+            # split uses the compacted index, recomputed fresh each time
+            split = survivor_split(total_hosts, dead_total)
+            if my_host in dead_total:
+                raise RuntimeError("this host was declared dead") from e
+            host_index = split[my_host]
+            # the survivor count must divide the global batch; otherwise
+            # idle the fewest hosts that make it divide (they stay healthy
+            # spares) rather than dying with 3 good hosts and a checkpoint
+            new_count = max(h for h in range(1, len(split) + 1)
+                            if pipe.global_batch % h == 0)
+            if new_count < len(split):
+                log_fn(f"[launch] batch {pipe.global_batch} not divisible "
+                       f"by {len(split)} survivors; idling "
+                       f"{len(split) - new_count} host(s)")
+            if host_index >= new_count:
+                raise RuntimeError(
+                    "this host was idled by the rebalance") from e
+            pipe = pipe.rebalance(host_index, new_count)
+            if loop_cfg.ckpt_dir is None:
+                log_fn("[launch] WARNING: no --ckpt-dir; restarting from "
+                       "scratch, all pre-failure progress is lost")
+            # the in-memory params may hold buffers the jitted step donated;
+            # re-materialize a template (values are overwritten by the
+            # checkpoint restore inside train_loop on re-entry)
+            params = model_api.init_model(cfg, jax.random.PRNGKey(0))
+    raise RuntimeError(f"gave up after {max_restarts} elastic restarts")
 
 
 def main():
@@ -39,6 +189,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh", default="", help="e.g. 2x2 => (data=2, model=2)")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="fleet size for the heartbeat/elastic machinery")
+    ap.add_argument("--chips-per-host", type=int, default=1)
+    ap.add_argument("--simulate-dead-at", type=int, default=None,
+                    help="mark a worker dead at this step (elastic demo)")
+    ap.add_argument("--simulate-dead-worker", type=int, default=1)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -48,51 +204,49 @@ def main():
 
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
                           compress_grads=args.compress_grads)
-    pipe = DataPipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    pipe = DataPipeline(cfg, seq_len=args.seq, global_batch=args.batch,
+                        host_index=0, host_count=args.hosts)
     fw = {"remat": True}
-    if cfg.family == "moe":
-        fw["num_groups"] = 1
-    if cfg.family == "ssm":
-        fw = {"remat": True}
 
-    mesh = None
+    mesh_shape = None
     if args.mesh:
-        from repro.launch.mesh import make_mesh
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = make_mesh((d, m), ("data", "model"))
-        ctx = ShardingCtx(mesh, TRAIN_RULES)
-        specs = model_api.model_specs(cfg)
-        p_sh = jax.tree_util.tree_map(
-            lambda ax: ctx.sharding(ax), pspec.logical_axes(specs),
-            is_leaf=lambda x: isinstance(x, tuple))
-        params = jax.device_put(params, p_sh)
+        mesh_shape = (d, m)
+        # mesh construction + param placement happen inside elastic_train,
+        # which rebuilds both on every (re)start anyway
+
+    def step_factory(data_parallel: int):
+        """Jitted step for the current DP ways; MoE routing groups must
+        track the (possibly shrunken) data axis."""
+        fw_now = dict(fw)
         if cfg.family == "moe":
-            fw["num_groups"] = d
+            fw_now["num_groups"] = data_parallel if mesh_shape else 1
+        step_fn = make_train_step(cfg, opt_cfg,
+                                  num_microbatches=args.microbatches, **fw_now)
+        return jax.jit(step_fn, donate_argnums=(0, 1))
 
-    step_fn = make_train_step(cfg, opt_cfg, num_microbatches=args.microbatches,
-                              **fw)
-    monitor = HeartbeatMonitor(num_workers=1)
+    loop_cfg = TrainLoopConfig(total_steps=args.steps,
+                               ckpt_every=args.ckpt_every,
+                               ckpt_dir=args.ckpt_dir)
 
-    def run():
-        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
-        loop_cfg = TrainLoopConfig(total_steps=args.steps,
-                                   ckpt_every=args.ckpt_every,
-                                   ckpt_dir=args.ckpt_dir)
-        if mesh is not None:
-            with use_sharding(mesh, TRAIN_RULES):
-                return train_loop(cfg, params, pipe, opt_cfg, loop_cfg,
-                                  train_step=jitted, monitor=monitor)
-        return train_loop(cfg, params, pipe, opt_cfg, loop_cfg,
-                          train_step=jitted, monitor=monitor)
+    if args.simulate_dead_at is not None:
+        injector = {"armed": True}
 
-    _, _, history = run()
+        def monitor_factory(n):
+            dead_at = args.simulate_dead_at if injector.pop("armed", None) \
+                else None
+            return FailureInjector(num_workers=n, dead_at=dead_at,
+                                   dead_worker=args.simulate_dead_worker)
+    else:
+        monitor_factory = None
+
+    _, _, history = elastic_train(
+        cfg, params, pipe, opt_cfg, loop_cfg, step_factory=step_factory,
+        mesh_shape=mesh_shape, total_hosts=args.hosts,
+        chips_per_host=args.chips_per_host, monitor_factory=monitor_factory)
     if history:
         print(f"[train] final loss {history[-1]['loss']:.4f} "
               f"(start {history[0]['loss']:.4f})")
-    stragglers = monitor.stragglers()
-    if stragglers:
-        plan = plan_elastic_mesh(total_hosts=1, dead_hosts=0)
-        print(f"[train] stragglers {stragglers}; elastic plan: {plan}")
 
 
 if __name__ == "__main__":

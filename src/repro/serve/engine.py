@@ -23,15 +23,27 @@ from repro.core.init_sequence import make_sequence
 
 @dataclasses.dataclass
 class SampleOut:
+    """Batched samplers carry per-request arrays in the scalar fields."""
     sample: jax.Array
-    rounds_used: int
-    accepted_core: int
-    speedup: float
+    rounds_used: object  # int, or [B] array when batched
+    accepted_core: object
+    speedup: object
 
 
 class StreamingSampler:
+    """Early-exit CHORDS sampler.
+
+    ``batched=True`` treats axis 0 of ``x0`` as independent requests: the
+    rtol accept test, the accepted round, and the chosen core are tracked
+    *per request*, and the lockstep loop runs until every request has
+    converged (or all N rounds ran). A whole-batch norm would let one
+    converged request accept the entire batch — and a single stiff request
+    hold every other one hostage.
+    """
+
     def __init__(self, drift, n_steps: int, num_cores: int, tgrid,
-                 i_seq: Optional[Sequence[int]] = None, rtol: float = 0.05):
+                 i_seq: Optional[Sequence[int]] = None, rtol: float = 0.05,
+                 batched: bool = False):
         self.n = n_steps
         self.k = num_cores
         self.tgrid = tgrid
@@ -40,6 +52,7 @@ class StreamingSampler:
         self.i_arr = jnp.asarray(self.i_seq, jnp.int32)
         self.rtol = rtol
         self.drift = drift
+        self.batched = batched
         self._jitted = None
 
     def _build(self, x0):
@@ -48,34 +61,54 @@ class StreamingSampler:
         emit = jnp.asarray(scheduler.emit_rounds(self.i_seq, self.n))
         rtol = self.rtol
         n = self.n
+        batched = self.batched
+
+        def norms(a):  # residual norm per request (or over the whole latent)
+            axes = tuple(range(1, a.ndim)) if batched else None
+            return jnp.sqrt(jnp.sum(a * a, axis=axes))
+
+        def rmask(m, a):  # broadcast a per-request mask over latent dims
+            return m.reshape(m.shape + (1,) * (a.ndim - m.ndim))
 
         def cond(state):
-            carry, r, accepted, _, _, _ = state
-            return (~accepted) & (r <= n)
+            carry, r, accepted = state[0], state[1], state[2]
+            return (~jnp.all(accepted)) & (r <= n)
 
         def body(state):
-            carry, r, accepted, last_out, has_last, chosen = state
+            (carry, r, accepted, last_out, has_last, chosen, rounds,
+             result) = state
             carry, _ = round_body(carry, r)
             x = carry[0]
             emitted_k = jnp.argmax(emit == r)  # core emitting this round (if any)
             any_emit = jnp.any(emit == r)
             out = x[emitted_k]
-            num = jnp.sqrt(jnp.sum((out - last_out) ** 2))
-            den = jnp.sqrt(jnp.sum(out**2)) + 1e-12
-            ok = any_emit & has_last & (num / den < rtol)
-            accepted = accepted | ok
+            num = norms(out - last_out)
+            den = norms(out) + 1e-12
+            ok = any_emit & has_last & (num / den < rtol) & (~accepted)
+            result = jnp.where(rmask(ok, out), out, result)
+            rounds = jnp.where(ok, r, rounds)
             chosen = jnp.where(ok, emitted_k, chosen)
+            accepted = accepted | ok
             last_out = jnp.where(any_emit, out, last_out)
             has_last = has_last | any_emit
-            return carry, r + 1, accepted, last_out, has_last, chosen
+            return (carry, r + 1, accepted, last_out, has_last, chosen,
+                    rounds, result)
 
         def run(x0):
+            req_shape = (x0.shape[0],) if batched else ()
             carry = chords_init_carry(x0, self.i_arr, self.k)
-            state = (carry, jnp.asarray(1), jnp.asarray(False), jnp.zeros_like(x0),
-                     jnp.asarray(False), jnp.asarray(0))
-            carry, r, accepted, last_out, _, chosen = jax.lax.while_loop(
-                cond, body, state)
-            return last_out, r - 1, chosen
+            state = (carry, jnp.asarray(1),
+                     jnp.zeros(req_shape, bool), jnp.zeros_like(x0),
+                     jnp.asarray(False), jnp.zeros(req_shape, jnp.int32),
+                     jnp.zeros(req_shape, jnp.int32), jnp.zeros_like(x0))
+            (carry, r, accepted, last_out, _, chosen, rounds,
+             result) = jax.lax.while_loop(cond, body, state)
+            # requests that never early-exited take the final emission —
+            # core 0's full-round output, i.e. the sequential solve
+            result = jnp.where(rmask(accepted, result), result, last_out)
+            rounds = jnp.where(accepted, rounds, n)
+            chosen = jnp.where(accepted, chosen, 0)
+            return result, rounds, chosen
 
         return jax.jit(run)
 
@@ -83,6 +116,10 @@ class StreamingSampler:
         if self._jitted is None:
             self._jitted = self._build(x0)
         out, rounds, chosen = self._jitted(x0)
+        if self.batched:
+            rounds = np.asarray(rounds)
+            return SampleOut(out, rounds, np.asarray(chosen),
+                             self.n / np.maximum(1, rounds))
         rounds = int(rounds)
         return SampleOut(out, rounds, int(chosen), self.n / max(1, rounds))
 
@@ -104,7 +141,7 @@ class ChordsEngine:
         self.max_batch = max_batch
         self.drift_builder = drift_builder
         self.sampler = StreamingSampler(drift_builder, n_steps, num_cores, tgrid,
-                                        rtol=rtol)
+                                        rtol=rtol, batched=True)
         self.queue: list[Request] = []
         self.stats = []
 
@@ -122,8 +159,13 @@ class ChordsEngine:
         t0 = time.perf_counter()
         out = self.sampler.sample(noise)
         dt = time.perf_counter() - t0
-        self.stats.append({"batch": len(batch), "rounds": out.rounds_used,
-                           "speedup": out.speedup, "wall_s": dt})
-        return [(r.rid, SampleOut(out.sample[i], out.rounds_used,
-                                  out.accepted_core, out.speedup))
+        # the lockstep loop runs until the *slowest* request converges; the
+        # batch's wall-clock rounds is therefore the per-request max
+        self.stats.append({"batch": len(batch),
+                           "rounds": int(np.max(out.rounds_used)),
+                           "speedup": float(np.min(out.speedup)),
+                           "wall_s": dt})
+        return [(r.rid, SampleOut(out.sample[i], int(out.rounds_used[i]),
+                                  int(out.accepted_core[i]),
+                                  float(out.speedup[i])))
                 for i, r in enumerate(batch)]

@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.dist.checkpoint import CheckpointManager
-from repro.dist.fault_tolerance import HeartbeatMonitor
+from repro.dist.fault_tolerance import HeartbeatMonitor, WorkerLost
 from repro.optim.optimizer import AdamWConfig, init_state
 from repro.train.train_step import make_train_step
 
@@ -28,18 +28,27 @@ class TrainLoopConfig:
 
 def train_loop(cfg: ModelConfig, params, data_iter, opt_cfg: AdamWConfig,
                loop_cfg: TrainLoopConfig, train_step=None, monitor=None,
-               log_fn=print, **fw_kwargs):
+               log_fn=print, sharding_ctx=None, state_axes=None, **fw_kwargs):
     """Runs the loop; resumes from the latest complete checkpoint if present.
 
     Returns (params, opt_state, history). ``train_step`` may be a pre-jitted
     sharded step from the launcher; defaults to a local jit.
+
+    ``sharding_ctx`` + ``state_axes`` (logical axes mirroring
+    ``{"params", "opt"}``) switch checkpointing to per-shard writes and place
+    restored state on the current mesh — which may differ from the mesh the
+    checkpoint was saved under (elastic restart). When the heartbeat monitor
+    declares workers dead, the loop raises :class:`WorkerLost` so the
+    launcher can re-plan the mesh and re-enter; the checkpoint restore at the
+    top of this function is the other half of that dance.
     """
     opt_state = init_state(params, opt_cfg)
     step0 = 0
     ckpt = CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep_ckpts) \
         if loop_cfg.ckpt_dir else None
     if ckpt is not None:
-        restored = ckpt.restore_latest({"params": params, "opt": opt_state})
+        restored = ckpt.restore_latest({"params": params, "opt": opt_state},
+                                       ctx=sharding_ctx, axes=state_axes)
         if restored is not None:
             state, step0 = restored
             params, opt_state = state["params"], state["opt"]
@@ -47,7 +56,11 @@ def train_loop(cfg: ModelConfig, params, data_iter, opt_cfg: AdamWConfig,
 
     if train_step is None:
         train_step = jax.jit(make_train_step(cfg, opt_cfg, **fw_kwargs))
-    monitor = monitor or HeartbeatMonitor(num_workers=1)
+    # default monitor: deaths only via mark_dead — a wall-clock timeout here
+    # would let a single slow save (multi-GB sharded write) make the lone
+    # worker declare *itself* dead; launchers pass a real fleet monitor
+    monitor = monitor or HeartbeatMonitor(num_workers=1,
+                                          timeout_s=float("inf"))
 
     history = []
     for step in range(step0, loop_cfg.total_steps):
@@ -63,7 +76,15 @@ def train_loop(cfg: ModelConfig, params, data_iter, opt_cfg: AdamWConfig,
             log_fn(f"[trainer] step={step} loss={m['loss']:.4f} "
                    f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} {dt*1e3:.0f}ms")
         if ckpt is not None and (step + 1) % loop_cfg.ckpt_every == 0:
-            ckpt.save({"params": params, "opt": opt_state}, step + 1)
-    if ckpt is not None:
-        ckpt.save({"params": params, "opt": opt_state}, loop_cfg.total_steps)
+            ckpt.save({"params": params, "opt": opt_state}, step + 1,
+                      ctx=sharding_ctx, axes=state_axes)
+        dead = monitor.dead_workers()
+        if dead:
+            raise WorkerLost(dead, step=step + 1, history=history)
+    # no final save when the loop never ran (restored step >= total_steps):
+    # it would relabel the newer restored state as step_total_steps and
+    # rewrite genuine history
+    if ckpt is not None and step0 < loop_cfg.total_steps:
+        ckpt.save({"params": params, "opt": opt_state}, loop_cfg.total_steps,
+                  ctx=sharding_ctx, axes=state_axes)
     return params, opt_state, history

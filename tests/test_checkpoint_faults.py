@@ -1,0 +1,277 @@
+"""Fault-injection suite for the sharded checkpoint format.
+
+Every case must degrade to the previous complete step — never raise out of
+``restore_latest``, never hand back corrupted values. The elastic round-trip
+pins the headline guarantee: a pytree saved sharded under an 8-device mesh
+restores bit-exactly onto the 4-device mesh ``plan_elastic_mesh`` produces.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.checkpoint import (MANIFEST, CheckpointManager,
+                                   TemplateMismatch, _shard_name)
+from repro.dist.fault_tolerance import plan_elastic_mesh, survivor_split
+from repro.dist.sharding import (TRAIN_RULES, ShardingCtx, mesh_desc,
+                                 normalize_spec, shard_grid, shard_slices)
+
+
+class FakeMesh:
+    """axis_names + shape is all ShardingCtx needs; no devices required."""
+
+    def __init__(self, axes, sizes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(zip(axes, sizes))
+
+
+MESH8 = FakeMesh(("data", "model"), (4, 2))   # 8 "devices"
+AXES = {"params": {"emb": ("embed", "heads"), "w": ("embed", "ffn")},
+        "step": ()}
+
+
+def _state(step: int):
+    """Pytree whose values identify the step they were saved at."""
+    return {
+        "params": {
+            "emb": jnp.arange(64 * 6, dtype=jnp.float32).reshape(64, 6) + step,
+            "w": jnp.full((8, 16), float(step), jnp.bfloat16),
+        },
+        "step": jnp.asarray(step),
+    }
+
+
+def _assert_is_step(restored, step: int):
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["emb"]),
+        np.asarray(_state(step)["params"]["emb"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.full((8, 16), float(step), np.float32))
+    assert int(restored["step"]) == step
+
+
+@pytest.fixture
+def mgr(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=5)
+    m.save(_state(1), 1, ctx=ShardingCtx(MESH8, TRAIN_RULES), axes=AXES)
+    m.save(_state(2), 2, ctx=ShardingCtx(MESH8, TRAIN_RULES), axes=AXES)
+    return m
+
+
+def _newest(mgr):
+    return os.path.join(mgr.dir, "step_00000002")
+
+
+def test_torn_shard_falls_back(mgr):
+    path = os.path.join(_newest(mgr), _shard_name(0, 3))
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)  # torn page: half the bytes vanish
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 1
+    _assert_is_step(restored, 1)
+
+
+def test_sha256_corrupt_shard_falls_back(mgr):
+    path = os.path.join(_newest(mgr), _shard_name(0, 0))
+    good = np.load(path)
+    np.save(path, good + 1000.0)  # well-formed npy, wrong contents
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 1
+    _assert_is_step(restored, 1)
+
+
+def test_manifest_missing_shard_falls_back(mgr):
+    os.remove(os.path.join(_newest(mgr), _shard_name(1, 5)))
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 1
+    _assert_is_step(restored, 1)
+
+
+def test_corrupt_manifest_falls_back(mgr):
+    with open(os.path.join(_newest(mgr), MANIFEST), "w") as f:
+        f.write('{"format": 2, "step": 2, "num_leav')  # torn json
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 1
+    _assert_is_step(restored, 1)
+
+
+def test_interrupted_before_manifest_ignored(mgr):
+    """Crash between shard writes and the manifest rename: the step dir
+    exists with shards but no MANIFEST — discovery must skip it and a new
+    manager must sweep it."""
+    d = os.path.join(mgr.dir, "step_00000003")
+    os.makedirs(d)
+    np.save(os.path.join(d, _shard_name(0, 0)), np.zeros(4))
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 2
+    _assert_is_step(restored, 2)
+    CheckpointManager(mgr.dir, keep=5)  # init sweep removes the debris
+    assert not os.path.isdir(d)
+
+
+def test_interrupted_multiwriter_stage_ignored(mgr):
+    """Writer crashed after staging shards but before process 0 finalized:
+    a .stage_step dir with no MANIFEST must never surface as a checkpoint."""
+    ctx = ShardingCtx(MESH8, TRAIN_RULES)
+    out = mgr.save(_state(3), 3, ctx=ctx, axes=AXES,
+                   process_index=1, process_count=2)
+    assert out is None  # non-finalizing writer
+    stage = os.path.join(mgr.dir, ".stage_step_00000003")
+    assert os.path.isdir(stage) and \
+        not os.path.isfile(os.path.join(stage, MANIFEST))
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 2
+    _assert_is_step(restored, 2)
+    CheckpointManager(mgr.dir, keep=5)  # init sweep removes crashed stage
+    assert not os.path.isdir(stage)
+
+
+def test_multiwriter_finalize_without_peers_fails_fast(mgr):
+    """Process 0 finalizing before its peers wrote (a missing barrier) must
+    raise a clear protocol error, not commit a manifest of missing shards."""
+    ctx = ShardingCtx(MESH8, TRAIN_RULES)
+    with pytest.raises(RuntimeError, match="barrier"):
+        mgr.save(_state(3), 3, ctx=ctx, axes=AXES,
+                 process_index=0, process_count=2)
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 2  # nothing half-committed
+    _assert_is_step(restored, 2)
+
+
+def test_multiwriter_completes_after_finalizer(mgr):
+    ctx = ShardingCtx(MESH8, TRAIN_RULES)
+    assert mgr.save(_state(3), 3, ctx=ctx, axes=AXES,
+                    process_index=1, process_count=2) is None
+    final = mgr.save(_state(3), 3, ctx=ctx, axes=AXES,
+                     process_index=0, process_count=2)
+    assert final is not None
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 3
+    _assert_is_step(restored, 3)
+
+
+def test_template_mismatch_raises_loudly(mgr):
+    """A wrong restore template (changed arch/optimizer) is a caller bug:
+    it must raise, not silently skip every checkpoint and restart at 0."""
+    wrong = {"params": {"emb": jnp.zeros((64, 6))}}  # missing leaves
+    with pytest.raises(TemplateMismatch):
+        mgr.restore_latest(wrong)
+
+
+def test_all_steps_corrupt_returns_none(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(_state(1), 1)
+    path = os.path.join(mgr.dir, "step_00000001", _shard_name(0, 0))
+    np.save(path, np.zeros((64, 6), np.float32))
+    assert mgr.restore_latest(_state(0)) is None
+
+
+def test_v1_format_restores(tmp_path):
+    """Old per-leaf .npy checkpoints (format v1) restore transparently."""
+    import hashlib
+    import jax
+
+    state = _state(4)
+    leaves, _ = jax.tree_util.tree_flatten(state)
+    d = os.path.join(str(tmp_path), "step_00000004")
+    os.makedirs(d)
+    man = {"step": 4, "num_leaves": len(leaves), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":
+            arr = arr.astype(np.float32)
+        name = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(d, name), arr)
+        sha = hashlib.sha256(open(os.path.join(d, name), "rb").read())
+        man["leaves"].append({"file": name, "dtype": str(arr.dtype),
+                              "shape": list(arr.shape),
+                              "sha256": sha.hexdigest()})
+    with open(os.path.join(d, MANIFEST), "w") as f:
+        json.dump(man, f)
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    restored, step = mgr.restore_latest(_state(0))
+    assert step == 4
+    _assert_is_step(restored, 4)
+
+
+# --- elastic round-trip -------------------------------------------------------
+
+def test_elastic_roundtrip_8dev_to_4dev(tmp_path):
+    """Acceptance: saved sharded under an 8-device mesh, restored bit-exactly
+    onto the 4-device mesh plan_elastic_mesh produces after a host dies."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    ctx8 = ShardingCtx(MESH8, TRAIN_RULES)
+    mgr.save(_state(9), 9, ctx=ctx8, axes=AXES)
+    assert mgr.saved_mesh() == mesh_desc(MESH8)
+
+    plan = plan_elastic_mesh(total_hosts=2, dead_hosts=1, chips_per_host=4,
+                             model_parallel=2, max_data=4)
+    assert plan.num_devices == 4
+    mesh4 = FakeMesh(("data", "model"),
+                     (plan.data_parallel, plan.model_parallel))
+    ctx4 = ShardingCtx(mesh4, TRAIN_RULES)
+    restored, step = mgr.restore_latest(_state(0), ctx=ctx4, axes=AXES)
+    assert step == 9
+    _assert_is_step(restored, 9)
+    assert survivor_split(2, {1}) == {0: 0}
+
+    # and back up: re-save under the small mesh, restore under the big one
+    mgr.save(restored, 10, ctx=ctx4, axes=AXES)
+    again, step = mgr.restore_latest(_state(0), ctx=ctx8, axes=AXES)
+    assert step == 10
+    _assert_is_step(again, 9)  # values still from step 9's state
+
+
+def test_shard_grid_math():
+    entries = normalize_spec((("data",), ("model",)), 3)
+    assert entries == (("data",), ("model",), ())
+    grid = shard_grid(entries, {"data": 4, "model": 2}, (64, 6, 5))
+    assert grid == (4, 2, 1)
+    # indivisible dim stays unsharded rather than going ragged
+    assert shard_grid(entries, {"data": 4, "model": 2}, (63, 6, 5)) == (1, 2, 1)
+    slices = list(shard_slices((2, 2), (4, 6)))
+    assert slices[0] == (0, (slice(0, 2), slice(0, 3)))
+    assert slices[-1] == (3, (slice(2, 4), slice(3, 6)))
+    blocks = np.zeros((4, 6))
+    for _, sl in slices:
+        blocks[sl] += 1
+    np.testing.assert_array_equal(blocks, np.ones((4, 6)))  # exact tiling
+
+
+# --- randomized never-raise sweep (nightly) -----------------------------------
+
+@pytest.mark.slow
+def test_fault_sweep_never_raises(tmp_path):
+    """Randomized corruption storms: any subset of faults on the newest step
+    must fall back to step 1 (or None if both die) and never raise."""
+    rng = np.random.default_rng(0)
+    ctx = ShardingCtx(MESH8, TRAIN_RULES)
+    for trial in range(30):
+        d = str(tmp_path / f"t{trial}")
+        mgr = CheckpointManager(d, keep=5)
+        mgr.save(_state(1), 1, ctx=ctx, axes=AXES)
+        mgr.save(_state(2), 2, ctx=ctx, axes=AXES)
+        newest = os.path.join(d, "step_00000002")
+        shards = sorted(f for f in os.listdir(newest) if f != MANIFEST)
+        victims = rng.choice(shards, size=rng.integers(1, 4), replace=False)
+        for v in victims:
+            path = os.path.join(newest, v)
+            mode = rng.integers(0, 3)
+            if mode == 0:
+                os.remove(path)
+            elif mode == 1:
+                with open(path, "r+b") as f:
+                    f.truncate(int(rng.integers(0, os.path.getsize(path))))
+            else:
+                with open(path, "r+b") as f:
+                    f.seek(int(rng.integers(0, os.path.getsize(path) - 1)))
+                    f.write(b"\xde\xad")
+        out = mgr.restore_latest(_state(0))
+        assert out is not None
+        restored, step = out
+        assert step == 1
+        _assert_is_step(restored, 1)

@@ -36,7 +36,7 @@ def test_checkpoint_corruption_falls_back():
         mgr.save(state, 1)
         mgr.save(state, 2)
         # corrupt the newest checkpoint's data
-        bad = os.path.join(d, "step_00000002", "leaf_00000.npy")
+        bad = os.path.join(d, "step_00000002", "leaf_00000.shard_000.npy")
         np.save(bad, np.zeros(6, np.float32))
         restored, step = mgr.restore_latest(state)
         assert step == 1  # checksum mismatch detected, older used
@@ -157,6 +157,23 @@ def test_data_determinism_and_host_sharding():
     h1 = DataPipeline(cfg, seq_len=32, global_batch=8, host_index=1, host_count=2)
     assert h0(0)["tokens"].shape == (4, 32)
     assert not np.array_equal(h0(0)["tokens"], h1(0)["tokens"])
+
+
+def test_host_slices_tile_the_global_batch():
+    """Any host split partitions the same (seed, step)-determined global
+    rows — the exactly-once property the elastic rebalance relies on."""
+    from repro.configs import get_config
+    from repro.data import DataPipeline
+    cfg = get_config("qwen1.5-0.5b", reduced=True)
+    full = DataPipeline(cfg, seq_len=32, global_batch=8)(5)["tokens"]
+    halves = [DataPipeline(cfg, seq_len=32, global_batch=8,
+                           host_index=i, host_count=2)(5)["tokens"]
+              for i in (0, 1)]
+    np.testing.assert_array_equal(np.concatenate(halves), full)
+    # a survivor rebalanced to the whole fleet reproduces the full batch
+    reb = DataPipeline(cfg, seq_len=32, global_batch=8,
+                       host_index=1, host_count=2).rebalance(0, 1)
+    np.testing.assert_array_equal(reb(5)["tokens"], full)
 
 
 def test_memmap_source_roundtrip(tmp_path):

@@ -1,0 +1,88 @@
+"""Property-based tests for the CHORDS scheduler (paper Eq. 7 index math).
+
+Runs under real hypothesis in CI and under the deterministic
+``repro.utils.hypothesis_fallback`` shim in containers without it (the shim
+replays seeded draws, boundary values first — see conftest.py).
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import scheduler
+from repro.core.init_sequence import make_sequence
+
+
+def _random_i_seq(k: int, seed: int, min_gap: int = 2):
+    """Random valid init sequence: i[0]=0, strictly increasing with gaps
+    >= min_gap, plus an n_steps leaving every core alive."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.integers(min_gap, min_gap + 5, size=k - 1)
+    i_seq = [0] + list(np.cumsum(gaps))
+    n = int(i_seq[-1] + rng.integers(1, 20))
+    return [int(v) for v in i_seq], n
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=2, max_value=10),
+       st.integers(min_value=0, max_value=10_000))
+def test_positions_monotone_per_core(k, seed):
+    """Each core's (cur, nxt) advance strictly monotonically over rounds,
+    never skipping past n, and the jax scheduler matches its numpy twin."""
+    i_seq, n = _random_i_seq(k, seed)
+    i_arr = np.asarray(i_seq)
+    prev_cur = None
+    for r in range(1, n + 1):
+        cur, nxt = scheduler.positions_np(i_seq, r)
+        jcur, jnxt = scheduler.positions(np.asarray(i_seq, np.int32), r)
+        np.testing.assert_array_equal(np.asarray(jcur), cur)
+        np.testing.assert_array_equal(np.asarray(jnxt), nxt)
+        assert (nxt > cur).all()
+        if prev_cur is not None:
+            assert (cur > prev_cur).all()  # strictly advancing per core
+        prev_cur = cur
+    # round 1: every core departs from x0 (cur = 0 = i[0] for all)
+    cur1, _ = scheduler.positions_np(i_seq, 1)
+    assert (cur1 == i_arr[0]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=2, max_value=10),
+       st.integers(min_value=0, max_value=10_000))
+def test_emit_rounds_strictly_decreasing(k, seed):
+    """Faster cores emit strictly earlier (gaps >= 2), core 0 emits at round
+    n (it IS the sequential solve), and every emit round is within [1, n]."""
+    i_seq, n = _random_i_seq(k, seed)
+    emit = scheduler.emit_rounds(i_seq, n)
+    assert emit[0] == n
+    assert (np.diff(emit) < 0).all()  # strictly decreasing slow -> fast
+    assert (emit >= 1).all() and (emit <= n).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=2, max_value=10),
+       st.integers(min_value=0, max_value=10_000))
+def test_emit_round_is_when_core_reaches_n(k, seed):
+    """At its emit round, a core's ``nxt`` is exactly n — the scheduler's
+    emit bookkeeping and its index math agree."""
+    i_seq, n = _random_i_seq(k, seed)
+    emit = scheduler.emit_rounds(i_seq, n)
+    for core, r in enumerate(emit):
+        _, nxt = scheduler.positions_np(i_seq, int(r))
+        assert nxt[core] == n
+        if r > 1:  # one round earlier it was not done yet
+            _, nxt_prev = scheduler.positions_np(i_seq, int(r) - 1)
+            assert nxt_prev[core] < n
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=8),
+       st.integers(min_value=20, max_value=80))
+def test_make_sequence_outputs_satisfy_invariants(k, n):
+    """Sequences the planner actually emits: valid, core 0 emits at n, and
+    emit rounds never increase slow -> fast."""
+    i_seq = make_sequence(k, n)
+    assert i_seq[0] == 0 and all(b > a for a, b in zip(i_seq, i_seq[1:]))
+    assert i_seq[-1] < n
+    emit = scheduler.emit_rounds(i_seq, n)
+    assert emit[0] == n
+    assert (np.diff(emit) <= 0).all()

@@ -1,0 +1,106 @@
+"""Per-request early-exit acceptance in the streaming serve engine.
+
+Regression for the whole-batch-norm accept bug: the rtol residual used to be
+computed over the entire batch, so one big, easy request could accept a
+batch that still contained an unconverged stiff request (and one stiff
+request could hold every converged one hostage). The accept test is now per
+request.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chords_sample, make_sequence, scheduler, uniform_tgrid
+from repro.serve import StreamingSampler
+
+
+N = 20
+K = 4
+RTOL = 0.05
+# request 0: easy (nearly linear drift), scaled 100x so a whole-batch norm
+# is dominated by it; request 1: stiff (fast decay, big inter-core
+# disagreement on the jump phase)
+LAM = jnp.asarray([[0.05], [6.0]])
+
+
+def _drift(x, t):
+    return -LAM * x
+
+
+def _sequential(x0, tgrid):
+    """Euler solve of dx/dt = -lam x on the same grid, per request."""
+    x = np.asarray(x0, np.float64)
+    tg = np.asarray(tgrid, np.float64)
+    lam = np.asarray(LAM, np.float64)
+    for i in range(len(tg) - 1):
+        x = x + (tg[i + 1] - tg[i]) * (-lam * x)
+    return x
+
+
+def _setup():
+    tgrid = uniform_tgrid(N, 0.98)
+    i_seq = make_sequence(K, N)
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (2, 6))
+    x0 = x0.at[0].mul(100.0)  # easy request dominates any batch-wide norm
+    return tgrid, i_seq, x0
+
+
+def test_accept_is_per_request():
+    tgrid, i_seq, x0 = _setup()
+    sampler = StreamingSampler(_drift, N, K, tgrid, i_seq=i_seq, rtol=RTOL,
+                               batched=True)
+    out = sampler.sample(x0)
+    rounds = np.asarray(out.rounds_used)
+    seq = _sequential(x0, tgrid)
+
+    # the easy request exits earlier than the stiff one
+    assert rounds[0] < rounds[1], rounds
+    # and BOTH results are faithful to the sequential solve
+    for b in range(2):
+        err = np.linalg.norm(np.asarray(out.sample)[b] - seq[b]) \
+            / (np.linalg.norm(seq[b]) + 1e-12)
+        assert err < 0.1, (b, err)
+    # per-request speedup bookkeeping is consistent
+    np.testing.assert_allclose(np.asarray(out.speedup),
+                               N / np.maximum(1, rounds))
+
+
+def test_whole_batch_accept_would_have_been_garbage():
+    """At the round where the easy request exits, the then-emitting core's
+    output for the stiff request is still way off — exactly what the old
+    whole-batch norm would have returned for it."""
+    tgrid, i_seq, x0 = _setup()
+    sampler = StreamingSampler(_drift, N, K, tgrid, i_seq=i_seq, rtol=RTOL,
+                               batched=True)
+    out = sampler.sample(x0)
+    easy_round = int(np.asarray(out.rounds_used)[0])
+    stiff_round = int(np.asarray(out.rounds_used)[1])
+    assert easy_round < stiff_round
+
+    res = chords_sample(_drift, x0, tgrid, i_seq)
+    emit = scheduler.emit_rounds(i_seq, N)
+    # the core whose output the old code would have handed to BOTH requests
+    core = int(np.where(emit == easy_round)[0][0])
+    seq = _sequential(x0, tgrid)
+    stiff_then = np.asarray(res.outputs)[core][1]
+    err_then = np.linalg.norm(stiff_then - seq[1]) \
+        / (np.linalg.norm(seq[1]) + 1e-12)
+    assert err_then > RTOL, err_then  # accepting at that round = garbage
+
+
+def test_unbatched_sampler_unchanged():
+    """batched=False keeps the single-latent semantics (scalar fields)."""
+    tgrid, i_seq, _ = _setup()
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (6,)) * 100.0
+    lam_scalar = 0.05
+
+    def drift(x, t):
+        return -lam_scalar * x
+
+    sampler = StreamingSampler(drift, N, K, tgrid, i_seq=i_seq, rtol=RTOL)
+    out = sampler.sample(x0)
+    assert isinstance(out.rounds_used, int)
+    assert isinstance(out.accepted_core, int)
+    assert out.sample.shape == (6,)
+    assert out.speedup >= 1.0
