@@ -60,6 +60,50 @@ def report(cells=None, out_path=None):
     return text
 
 
+def grad_wire_report(cells=None, out_path=None):
+    """Bytes-on-wire of the gradient reduction: exact fp32 psum vs the int8
+    error-feedback collective (``make_train_step(mesh=...)`` +
+    ``compress_grads``; dryrun variant tag 'compressed').
+
+    Two numbers per train cell: the analytic per-device wire bytes
+    (exact ring all-reduce ~ 2 x 4B x params; two-phase int8 ~ 2 x 1B x
+    params: all-to-all + all-gather) and, when both the baseline and the
+    'compressed'-variant dry-run artifacts exist, the measured HLO
+    collective-byte delta between them.
+    """
+    cells = cells if cells is not None else load_cells()
+    by_key = {}
+    for c in cells:
+        if c.get("skipped") or c.get("kind") != "train":
+            continue
+        variant = "compressed" if "compressed" in c["_file"] else "exact"
+        by_key.setdefault(
+            c["_file"].replace("compressed", "").replace(".json", ""),
+            {})[variant] = c
+    lines = ["# Gradient-reduction wire bytes (per device per step)",
+             f"{'cell':<40}{'exact(analytic)':>16}{'int8(analytic)':>16}"
+             f"{'measured delta':>16}"]
+    for key, pair in sorted(by_key.items()):
+        base = pair.get("exact") or pair.get("compressed")
+        n_params = base.get("n_params")
+        if not n_params:
+            continue
+        exact = 2.0 * 4.0 * n_params
+        comp = 2.0 * 1.0 * n_params
+        delta = ""
+        if "exact" in pair and "compressed" in pair:
+            b = pair["exact"]["per_device"]["collective_bytes"]["total"]
+            c_ = pair["compressed"]["per_device"]["collective_bytes"]["total"]
+            delta = f"{b - c_:+.3e}"
+        lines.append(f"{key:<40}{exact:>16.3e}{comp:>16.3e}{delta:>16}")
+    text = "\n".join(lines)
+    print(text)
+    if out_path:
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+    return text
+
+
 def nominate_hillclimb(cells=None):
     cells = [c for c in (cells or load_cells("*__pod.json"))
              if not c.get("skipped")]
@@ -80,5 +124,6 @@ def nominate_hillclimb(cells=None):
 
 if __name__ == "__main__":
     report()
+    grad_wire_report()
     for p in nominate_hillclimb():
         print("HILLCLIMB:", p)

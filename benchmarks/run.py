@@ -3,20 +3,84 @@
 Prints ``name,us_per_call,derived`` CSV rows; writes results/benchmarks.json.
 Roofline terms (from the compiled dry-run) print at the end when
 results/dryrun/*.json exist (produced by ``python -m repro.launch.dryrun --all``).
+
+``--serve-smoke`` runs the CI-sized continuous-batching throughput check: a
+tiny analytic drift through the real ``ContinuousEngine`` API (so any
+engine-API import/signature break fails the tier-1 job), asserting the slot
+runtime drains a staggered request set and beats the static-batch engine.
 """
 from __future__ import annotations
 
+import sys
+
+
+def serve_smoke() -> dict:
+    """CPU-scale continuous-batching smoke benchmark (CI tier-1)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import uniform_tgrid
+    from repro.serve import ChordsEngine, ContinuousEngine, Request
+
+    n, k, slots, n_req = 16, 4, 2, 6
+    tg = uniform_tgrid(n, 0.98)
+    lam = jnp.linspace(0.1, 1.5, 4)
+
+    def drift(x, t):  # tiny anisotropic linear drift — stiff enough to spread
+        return -x * lam  # per-request convergence rounds
+
+    t0 = time.perf_counter()
+    cont = ContinuousEngine(drift, latent_shape=(4,), n_steps=n, num_cores=k,
+                            tgrid=tg, num_slots=slots, rtol=0.3)
+    for i in range(n_req):
+        cont.submit(Request(rid=i, key=jax.random.PRNGKey(i)))
+    served = cont.run_until_drained()
+    wall = time.perf_counter() - t0
+    st = cont.stats()
+    assert len(served) == n_req, (len(served), n_req)
+    assert all(np.isfinite(np.asarray(o.sample)).all() for _, o in served)
+
+    static = ChordsEngine(drift, latent_shape=(4,), n_steps=n, num_cores=k,
+                          tgrid=tg, max_batch=slots, rtol=0.3)
+    for i in range(n_req):
+        static.submit(Request(rid=i, key=jax.random.PRNGKey(i)))
+    while static.queue:
+        static.step()
+    assert static.sampler.num_traces == 1, static.sampler.num_traces
+    assert st["rounds_total"] <= static.total_rounds(), (
+        st["rounds_total"], static.total_rounds())
+
+    out = {"requests": n_req, "rounds_total": st["rounds_total"],
+           "static_rounds": static.total_rounds(),
+           "throughput_req_per_round": st["throughput_req_per_round"],
+           "latency_p50": st["latency_rounds_p50"],
+           "latency_p95": st["latency_rounds_p95"],
+           "wall_s": wall}
+    print("serve_smoke," + ",".join(f"{k}={v}" for k, v in out.items()))
+    return out
+
 
 def main() -> None:
+    if "--serve-smoke" in sys.argv:
+        serve_smoke()
+        print("serve_smoke,OK")
+        return
+
     from benchmarks import tables
-    from benchmarks.roofline import load_cells, nominate_hillclimb, report
+    from benchmarks.roofline import (grad_wire_report, load_cells,
+                                     nominate_hillclimb, report)
 
     tables.run_all()
+    serve_smoke()
 
     cells = load_cells()
     if cells:
         print("\n# Roofline (from dry-run artifacts)")
         report(cells)
+        grad_wire_report(cells)
         for p in nominate_hillclimb():
             print("HILLCLIMB:", p)
     else:

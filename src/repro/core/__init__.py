@@ -1,6 +1,15 @@
 """CHORDS core: the paper's contribution (multi-core hierarchical ODE solvers)."""
 from repro.core.baselines import BaselineResult, paradigms_sample, srds_sample  # noqa: F401
-from repro.core.chords import ChordsResult, chords_sample, select_output  # noqa: F401
+from repro.core.chords import (  # noqa: F401
+    ChordsCarry,
+    ChordsResult,
+    accept_test,
+    chords_sample,
+    make_slot_round_body,
+    reset_slots,
+    select_output,
+    slot_init_carry,
+)
 from repro.core.init_sequence import (  # noqa: F401
     PAPER_PRESETS,
     discretize,

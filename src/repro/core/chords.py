@@ -12,11 +12,19 @@ snapshot position) — see ``repro.core.rectify``.
 
 The final core's trajectory is untouched by rectification, so output K==1 is
 bit-identical to ``solvers.sequential_sample`` (tested invariant).
+
+Carry layout: the per-core state rides a named :class:`ChordsCarry` pytree,
+shared by ``chords_sample``, the streaming sampler, and the serve engines.
+``make_slot_round_body`` generalizes the round to a fixed ``[S, K, ...]``
+slot×core grid with a per-slot init sequence and round counter, which is what
+lets the continuous-batching runtime admit/drain requests mid-flight without
+retracing (``repro.serve.engine``): finished lanes are re-initialized in
+place with :func:`reset_slots`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +33,21 @@ import numpy as np
 from repro.core import scheduler
 from repro.core.ode import DriftFn
 from repro.core.rectify import rectify_delta
+from repro.dist.sharding import vmap_logical
+
+
+class ChordsCarry(NamedTuple):
+    """Per-core lockstep state (a pytree; NamedTuple => scan/jit friendly).
+
+    Leading axes are ``[K, ...]`` for the batch sampler and ``[S, K, ...]``
+    on the slot grid (``p`` is ``[K]`` / ``[S, K]``).
+    """
+
+    x: jax.Array       # current latent per core
+    x_snap: jax.Array  # latent snapshot at the core's snapshot position
+    f_snap: jax.Array  # drift recorded at the snapshot position
+    p: jax.Array       # snapshot position per core (int32, starts at i_arr)
+    finals: jax.Array  # emitted outputs (written when a core reaches t=1)
 
 
 @dataclasses.dataclass
@@ -39,17 +62,39 @@ class ChordsResult:
         return self.n_steps / float(self.emit_rounds[k])
 
 
-def _bmask(mask, x):
-    return mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+def bmask(mask, x):
+    """Broadcast a leading-axes mask over the trailing latent dims of x."""
+    return mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
 
 
-def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
-                    collect_trace: bool = False):
-    """One lockstep round of Algorithm 1 (shared by the batch sampler and the
-    streaming serve engine). carry = (x, x_snap, f_snap, p, finals)."""
-    vdrift = jax.vmap(drift, in_axes=(0, 0))
+def accept_test(out, prev, rtol, batch_ndim: int = 0):
+    """Consecutive-arrival agreement test (paper §5 "diffusion streaming"):
 
-    def round_body(carry, r):
+        ||out - prev|| / (||out|| + eps) < rtol
+
+    with norms over all but the leading ``batch_ndim`` axes. This is THE
+    accept semantics — ``select_output``, ``StreamingSampler``, and the slot
+    engine all call it, so the rtol test cannot drift between code paths.
+    Works on jnp and np inputs; returns a bool array of rank ``batch_ndim``.
+    """
+    axes = tuple(range(batch_ndim, jnp.ndim(out)))
+    num = jnp.sqrt(jnp.sum((out - prev) ** 2, axis=axes))
+    den = jnp.sqrt(jnp.sum(out * out, axis=axes)) + 1e-12
+    return num / den < rtol
+
+
+def _make_round_step(drift: DriftFn, tgrid, n: int, k: int):
+    """One lockstep round over a single [K, ...] core grid.
+
+    Returns ``step(carry, i_arr, r) -> (carry, emitted)`` with ``i_arr`` a
+    traced operand so the slot grid can carry a *per-slot* init sequence.
+    The drift is vmapped over the cores axis via ``vmap_logical`` so that an
+    ambient ``use_sharding`` context can place the axis on the mesh and
+    interior ``shard_act`` constraints stay rank-aware.
+    """
+    vdrift = vmap_logical(drift, "cores", in_axes=(0, 0))
+
+    def step(carry: ChordsCarry, i_arr, r):
         x, x_snap, f_snap, p, finals = carry
         cur, nxt = scheduler.positions(i_arr, r)
         alive = cur <= n - 1
@@ -59,10 +104,10 @@ def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
 
         # snapshot refresh: core is sitting exactly on its snapshot position
         at_snap = (cur == p) & alive
-        x_snap = jnp.where(_bmask(at_snap, x), x, x_snap)
-        f_snap = jnp.where(_bmask(at_snap, f), f, f_snap)
+        x_snap = jnp.where(bmask(at_snap, x), x, x_snap)
+        f_snap = jnp.where(bmask(at_snap, f), f, f_snap)
 
-        delta = _bmask((t_nxt - t_cur), f) * f
+        delta = bmask((t_nxt - t_cur), f) * f
 
         # rectification: previous core sits on this core's snapshot position
         x_up = jnp.roll(x, 1, axis=0)
@@ -71,25 +116,96 @@ def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
         k0 = jnp.arange(k)
         fire = (k0 > 0) & (cur_up == p) & alive
         t_p = tgrid[jnp.clip(p, 0, n)]
-        rect = rectify_delta(x_up, f_up, x_snap, f_snap, _bmask(t_nxt - t_p, f))
-        delta = delta + jnp.where(_bmask(fire, delta), rect, 0.0)
+        rect = rectify_delta(x_up, f_up, x_snap, f_snap, bmask(t_nxt - t_p, f))
+        delta = delta + jnp.where(bmask(fire, delta), rect, 0.0)
 
         x_new = x + delta
-        x_snap = jnp.where(_bmask(fire, x_new), x_new, x_snap)
+        x_snap = jnp.where(bmask(fire, x_new), x_new, x_snap)
         p = jnp.where(fire, nxt, p)
-        x = jnp.where(_bmask(alive, x_new), x_new, x)
+        x = jnp.where(bmask(alive, x_new), x_new, x)
 
         emitted = (nxt == n) & alive
-        finals = jnp.where(_bmask(emitted, x), x, finals)
-        trace = x if collect_trace else emitted
-        return (x, x_snap, f_snap, p, finals), trace
+        finals = jnp.where(bmask(emitted, x), x, finals)
+        return ChordsCarry(x, x_snap, f_snap, p, finals), emitted
+
+    return step
+
+
+def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
+                    collect_trace: bool = False):
+    """One lockstep round of Algorithm 1 over a [K, ...] grid (shared by the
+    batch sampler and the streaming serve engine). carry = ChordsCarry."""
+    step = _make_round_step(drift, tgrid, n, k)
+
+    def round_body(carry: ChordsCarry, r):
+        new_carry, emitted = step(carry, i_arr, r)
+        trace = new_carry.x if collect_trace else emitted
+        return new_carry, trace
 
     return round_body
 
 
-def chords_init_carry(x0, i_arr, k: int):
+def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int):
+    """One lockstep round over a fixed [S, K, ...] slot×core grid.
+
+    Each slot is an independent request lane with its own init sequence
+    (``i_arr[s]``) and round counter (``r[s]``) — slots join and leave the
+    lockstep loop mid-flight. Dead (``~live``) lanes still evaluate the drift
+    (the grid shape is static, so nothing retraces) but their carry is frozen.
+
+    Under ``use_sharding`` the slots axis is placed per the rule table
+    (serve rules: slots -> 'data') via ``vmap_logical``; the cores axis then
+    stays local to a slot's shard.
+
+    Returns ``slot_round(carry, i_arr, r, live) -> (carry, emitted)`` with
+    ``emitted`` a [S, K] bool of cores that reached t=1 this round.
+    """
+    step = _make_round_step(drift, tgrid, n, k)
+    vstep = vmap_logical(step, "slots", in_axes=(0, 0, 0))
+
+    def slot_round(carry: ChordsCarry, i_arr, r, live):
+        new_carry, emitted = vstep(carry, i_arr, r)
+        frozen = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(bmask(live, new), new, old),
+            new_carry, carry)
+        return frozen, emitted & live[:, None]
+
+    return slot_round
+
+
+def chords_init_carry(x0, i_arr, k: int) -> ChordsCarry:
     x = jnp.broadcast_to(x0, (k,) + x0.shape).astype(x0.dtype)
-    return (x, x, jnp.zeros_like(x), i_arr, jnp.zeros_like(x))
+    return ChordsCarry(x=x, x_snap=x, f_snap=jnp.zeros_like(x), p=i_arr,
+                       finals=jnp.zeros_like(x))
+
+
+def slot_init_carry(num_slots: int, k: int, latent_shape, dtype=jnp.float32
+                    ) -> ChordsCarry:
+    """Empty [S, K, ...] grid — every lane dead until ``reset_slots`` admits."""
+    z = jnp.zeros((num_slots, k) + tuple(latent_shape), dtype)
+    return ChordsCarry(x=z, x_snap=z, f_snap=z,
+                       p=jnp.zeros((num_slots, k), jnp.int32),
+                       finals=z)
+
+
+def reset_slots(carry: ChordsCarry, mask, x0, i_arr) -> ChordsCarry:
+    """Re-initialize masked slot lanes in place (admission without retracing).
+
+    mask: [S] bool — lanes to reset; x0: [S, ...] fresh noise (rows read only
+    where mask); i_arr: [S, K] per-slot init sequences. Unmasked lanes are
+    untouched, so in-flight requests never observe an admission.
+    """
+    k = carry.p.shape[-1]
+    x = jnp.broadcast_to(x0[:, None], (x0.shape[0], k) + x0.shape[1:]) \
+        .astype(carry.x.dtype)
+    m = bmask(mask, carry.x)
+    return ChordsCarry(
+        x=jnp.where(m, x, carry.x),
+        x_snap=jnp.where(m, x, carry.x_snap),
+        f_snap=jnp.where(m, 0.0, carry.f_snap),
+        p=jnp.where(mask[:, None], i_arr, carry.p),
+        finals=jnp.where(m, 0.0, carry.finals),
+    )
 
 
 def chords_sample(
@@ -114,11 +230,9 @@ def chords_sample(
 
     round_body = make_round_body(drift, tgrid, i_arr, n, k, collect_trace)
     init = chords_init_carry(x0, i_arr, k)
-    (xf, _, _, _, finals), trace = jax.lax.scan(
-        round_body, init, jnp.arange(1, n + 1)
-    )
+    final_carry, trace = jax.lax.scan(round_body, init, jnp.arange(1, n + 1))
     return ChordsResult(
-        outputs=finals,
+        outputs=final_carry.finals,
         emit_rounds=scheduler.emit_rounds(list(i_seq), n),
         n_steps=n,
         trace=trace if collect_trace else None,
@@ -137,11 +251,8 @@ def select_output(result: ChordsResult, rtol: float = 0.05):
     order = list(range(k - 1, -1, -1))  # arrival order: core K-1 first
     prev = None
     for j, core in enumerate(order):
-        if prev is not None:
-            num = np.linalg.norm(outs[core] - outs[prev])
-            den = np.linalg.norm(outs[core]) + 1e-12
-            if num / den < rtol:
-                r = int(result.emit_rounds[core])
-                return core, r, result.n_steps / r
+        if prev is not None and bool(accept_test(outs[core], outs[prev], rtol)):
+            r = int(result.emit_rounds[core])
+            return core, r, result.n_steps / r
         prev = core
     return 0, int(result.emit_rounds[0]), 1.0

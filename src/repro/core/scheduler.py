@@ -47,3 +47,10 @@ def emit_rounds(i_seq, n_steps):
     """Round (1-based) at which each core emits its output."""
     k0 = np.arange(len(i_seq))
     return n_steps - np.asarray(i_seq) + k0
+
+
+def emit_rounds_jnp(i_arr, n_steps):
+    """Traceable twin of ``emit_rounds`` for in-graph use; ``i_arr`` may
+    carry leading batch/slot dims ([..., K])."""
+    k0 = jnp.arange(i_arr.shape[-1])
+    return n_steps - i_arr + k0

@@ -2,12 +2,17 @@
 
 ``make_compressed_psum(mesh, axis)`` builds an error-feedback int8 all-reduce
 over one mesh axis: each shard quantizes its (input + carried residual) to
-int8 with a per-shard fp32 scale, the quantized values are summed across the
-axis, and the quantization residual is returned for the caller to feed back
-into the next round (Karimireddy et al., error-feedback SGD). Wire traffic is
-1 byte/element + one fp32 scale per shard vs 4 bytes/element for exact psum;
-the returned sum matches exact psum within int8 quantization error and the
+int8 with a per-shard fp32 scale, the int8 payload + scales are all-gathered
+(that IS the wire traffic: 1 byte/element + one fp32 scale per shard, vs
+2 x 4 bytes/element for a ring all-reduce), and every shard dequantizes and
+sums locally. The quantization residual is returned for the caller to feed
+back into the next round (Karimireddy et al., error-feedback SGD): the
+returned sum matches exact psum within int8 quantization error and the
 residual makes the *accumulated* error vanish over steps.
+
+Because the gather really moves int8, the compiled HLO carries the compressed
+byte counts — ``launch.hlo_analysis.collective_bytes`` measures the wire
+saving directly (see ``benchmarks/roofline.py::grad_wire_report``).
 """
 from __future__ import annotations
 
@@ -22,6 +27,21 @@ def _quantize_int8(g, eps: float = 1e-12):
     q = jnp.clip(jnp.round(g / scale), -127.0, 127.0)
     deq = q * scale
     return q, scale, g - deq
+
+
+def quantized_allgather_sum(q, scale, axis: str):
+    """Shared wire step: all-gather int8 levels + per-shard scales over
+    ``axis`` and dequant-sum locally (all-reduce semantics, int8 on the wire).
+
+    ``q`` holds int8-representable float levels; must run inside shard_map.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    q8 = jax.lax.all_gather(q.astype(jnp.int8), axis)         # [W, ...] int8
+    scales = jax.lax.all_gather(scale, axis)                  # [W] fp32
+    return jnp.sum(q8.astype(jnp.float32)
+                   * scales.reshape((-1,) + (1,) * q.ndim), axis=0)
 
 
 def make_compressed_psum(mesh, axis: str):
@@ -40,14 +60,11 @@ def make_compressed_psum(mesh, axis: str):
     spec = P(axis)
 
     @functools.partial(shard_map, mesh=mesh, in_specs=(spec, spec),
-                       out_specs=(spec, spec))
+                       out_specs=(spec, spec), check_rep=False)
     def f(x, err):
         g = x.astype(jnp.float32) + err.astype(jnp.float32)
         q, scale, residual = _quantize_int8(g)
-        # On the wire this is an int8 ring all-reduce plus a per-shard fp32
-        # scale; XLA has no mixed-scale int8 psum primitive, so we model it
-        # as psum of the dequantized values — numerics are identical.
-        total = jax.lax.psum(q * scale, axis)
+        total = quantized_allgather_sum(q, scale, axis)
         return total.astype(x.dtype), residual.astype(err.dtype)
 
     return jax.jit(f)

@@ -14,9 +14,17 @@ for replicated). :class:`ShardingCtx` turns (logical_axes, shape) into a
 
 ``shard_act`` is the in-model annotation hook: inside a ``use_sharding``
 context it lowers to ``with_sharding_constraint``; outside any context it is
-a strict no-op, so single-device tests and the vmapped CHORDS round (whose
-cores->data carry sharding conflicts with rank-blind interior constraints)
-pay nothing.
+a strict no-op, so single-device tests pay nothing.
+
+Vmap-awareness: code that lifts a *named* leading axis out with ``vmap``
+(the CHORDS cores axis, the serve slot axis) wraps the vmap in
+:func:`vmap_logical`. That (a) registers the lifted logical axis in a
+thread-local prefix stack so interior ``shard_act`` calls *reserve* its mesh
+axes instead of double-booking them (the old rank-blind conflict that forced
+whole-latent all-gathers every layer), and (b) attaches the lifted axis's
+mesh axes to the vmapped dim itself via ``spmd_axis_name``. The lockstep
+round can therefore run under ``use_sharding`` with slots/cores on 'data'
+and interior TP constraints intact.
 """
 from __future__ import annotations
 
@@ -53,12 +61,15 @@ TRAIN_RULES: Rules = {
     "embed_act": None,
     "groups": "data",
     "cores": None,
+    "slots": None,
 }
 
 # Serving: pure TP for params (no FSDP gather on the forward hot path);
 # requests ride 'data'. CHORDS cores ride 'data' too — in the lockstep round
 # the cores dim comes first, so it wins the data axis and per-request batch
-# stays local to a core.
+# stays local to a core. On the slot grid the slots dim is outermost and wins
+# 'data' instead (vmap_logical reserves it before cores ask), so each slot's
+# K-core lane stays shard-local and the inter-core roll needs no wire at all.
 SERVE_RULES: Rules = {
     "vocab": "model",
     "embed": None,
@@ -77,6 +88,7 @@ SERVE_RULES: Rules = {
     "embed_act": None,
     "groups": "data",
     "cores": "data",
+    "slots": "data",
 }
 
 # FSDP over the layers-stacked dim instead of embed: cheaper all-gather
@@ -124,17 +136,21 @@ class ShardingCtx:
     # -- spec construction ----------------------------------------------------
 
     def pspec(self, axes: Sequence[Optional[str]],
-              shape: Optional[Sequence[int]] = None):
+              shape: Optional[Sequence[int]] = None,
+              reserved: Sequence[str] = ()):
         """PartitionSpec for a tensor with the given logical axes.
 
         ``shape`` enables the divisibility fallback; without it every rule is
-        assumed to divide (dry-run structs always pass shapes).
+        assumed to divide (dry-run structs always pass shapes). ``reserved``
+        mesh axes are treated as already taken — used by ``shard_act`` under
+        ``vmap_logical`` so interior constraints don't claim the mesh axes an
+        enclosing vmapped slot/core dim occupies.
         """
         from jax.sharding import PartitionSpec
 
         mesh_axes = tuple(self.mesh.axis_names)
         axis_size = dict(self.mesh.shape)
-        used: set = set()
+        used: set = set(reserved)
         entries = [() for _ in axes]
         displaced = []  # mesh axes whose preferred dim failed divisibility
 
@@ -171,10 +187,11 @@ class ShardingCtx:
         return PartitionSpec(*[_normalize(e) for e in entries])
 
     def sharding(self, axes: Sequence[Optional[str]],
-                 shape: Optional[Sequence[int]] = None):
+                 shape: Optional[Sequence[int]] = None,
+                 reserved: Sequence[str] = ()):
         from jax.sharding import NamedSharding
 
-        return NamedSharding(self.mesh, self.pspec(axes, shape))
+        return NamedSharding(self.mesh, self.pspec(axes, shape, reserved))
 
     def shard_spec(self, axes: Sequence[Optional[str]],
                    shape: Sequence[int]
@@ -276,12 +293,79 @@ def use_sharding(mesh, rules: Rules):
         stack.pop()
 
 
+def _vmap_prefix() -> list:
+    st = getattr(_local, "vmap_prefix", None)
+    if st is None:
+        st = _local.vmap_prefix = []
+    return st
+
+
+@contextlib.contextmanager
+def vmapped_axes(*logical_names: str):
+    """Declare leading logical axes currently abstracted by an enclosing vmap.
+
+    While active, ``shard_act`` reserves those axes' mesh axes so interior
+    constraints cannot double-book them. ``vmap_logical`` manages this
+    automatically; use directly only for hand-rolled vmaps.
+    """
+    st = _vmap_prefix()
+    st.extend(logical_names)
+    try:
+        yield
+    finally:
+        del st[len(st) - len(logical_names):]
+
+
+def _reserved_axes(ctx: ShardingCtx) -> Tuple[str, ...]:
+    """Mesh axes owned by the active vmap prefix, in prefix order."""
+    out = []
+    for name in _vmap_prefix():
+        for a in _as_tuple(ctx.rules.get(name)):
+            if a in ctx.mesh.axis_names and a not in out:
+                out.append(a)
+    return tuple(out)
+
+
+def vmap_logical(fn, logical_axis: str, in_axes=0, out_axes=0):
+    """``jax.vmap`` whose batch dim is a *named logical axis*.
+
+    Under an active ``use_sharding`` context the lifted dim is placed on the
+    mesh per the rule table (via ``spmd_axis_name``) and registered in the
+    vmap prefix so interior ``shard_act`` constraints reserve its mesh axes
+    (rank-offset awareness). Nested calls compose: an outer 'slots' vmap that
+    takes 'data' leaves an inner 'cores' vmap unsharded. Outside a context
+    this is a plain vmap — single-device paths are bitwise unchanged.
+    """
+    import jax
+
+    def call(*args):
+        ctx = current_ctx()
+        spmd = None
+        if ctx is not None:
+            taken = _reserved_axes(ctx)
+            want = tuple(a for a in _as_tuple(ctx.rules.get(logical_axis))
+                         if a in ctx.mesh.axis_names and a not in taken)
+            spmd = _normalize(want)
+        with vmapped_axes(logical_axis):
+            if spmd is not None:
+                return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes,
+                                spmd_axis_name=spmd)(*args)
+            return jax.vmap(fn, in_axes=in_axes, out_axes=out_axes)(*args)
+
+    return call
+
+
 def shard_act(x, logical_axes: Sequence[Optional[str]]):
-    """Constrain an activation to the ambient rules; no-op outside a context."""
+    """Constrain an activation to the ambient rules; no-op outside a context.
+
+    Inside a ``vmap_logical`` region the constraint is built against the
+    *sliced* rank with the lifted axes' mesh axes reserved; jax's batching
+    rule re-inserts the vmapped dims (sharded iff spmd_axis_name was set)."""
     ctx = current_ctx()
     if ctx is None:
         return x
     import jax
 
     return jax.lax.with_sharding_constraint(
-        x, ctx.sharding(logical_axes, tuple(x.shape)))
+        x, ctx.sharding(logical_axes, tuple(x.shape),
+                        reserved=_reserved_axes(ctx)))

@@ -38,10 +38,11 @@ from repro.serve.steps import make_decode_step, make_prefill
 from repro.train.train_step import make_train_step
 
 # paper-native CHORDS denoiser cells (see DESIGN.md §7): one lockstep round
+# of the continuous-batching slot grid (repro.serve.ContinuousEngine's body)
 CHORDS_SHAPES = {
-    # (num_cores, batch_per_core, latent_seq, latent_dim)
-    "chords_image": (16, 8, 4096, 64),    # Flux-class 2k image latents
-    "chords_video": (16, 1, 32768, 64),   # Hunyuan-class 720p video latents
+    # (num_slots, num_cores, batch_per_slot, latent_seq, latent_dim)
+    "chords_image": (16, 8, 8, 4096, 64),   # Flux-class 2k image latents
+    "chords_video": (16, 8, 1, 32768, 64),  # Hunyuan-class 720p video latents
 }
 
 DEFAULT_MICROBATCH = {"train_4k": 8}
@@ -103,11 +104,17 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int,
         fw = {}
 
     if shape.kind == "train":
-        opt_cfg = AdamWConfig()
-        o_structs, o_axes = S.opt_structs(cfg, opt_cfg)
+        # 'compressed' variant: gradient all-reduce as the int8 error-feedback
+        # wire collective (grad_wire_report compares its collective bytes
+        # against this exact-psum baseline cell)
+        wire = "compressed" in variant
+        opt_cfg = AdamWConfig(compress_grads=wire)
+        grad_shards = dict(mesh.shape)["data"] if wire else 1
+        o_structs, o_axes = S.opt_structs(cfg, opt_cfg, grad_shards=grad_shards)
         o_sh = _tree_shardings(ctx, o_axes, o_structs)
-        nm = microbatches
+        nm = 1 if wire else microbatches
         fn = make_train_step(cfg, opt_cfg, num_microbatches=nm,
+                             mesh=mesh if wire else None,
                              **({**fw, "remat": True} if cfg.family != "ssm"
                                 else {"remat": True}))
         with use_sharding(mesh, rules):
@@ -145,17 +152,25 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int,
 
 
 def _build_chords_cell(cfg: ModelConfig, shape_name: str, mesh, cfg_flops=None):
-    """One CHORDS lockstep round on the production mesh: the paper's technique.
+    """One lockstep round of the continuous-batching slot grid on the
+    production mesh: the serve runtime's jitted hot loop.
 
-    Cores ride the 'data' axis; the latent roll between adjacent cores lowers
-    to a CollectivePermute; each core's denoiser is TP over 'model'.
+    Slots ride the 'data' axis (each data shard owns S/data_ways request
+    lanes, cores local to the shard so the inter-core roll needs no wire);
+    each drift eval is TP over 'model'. The round is traced *under*
+    ``use_sharding``: ``vmap_logical`` reserves 'data' for the slots dim so
+    interior ``shard_act`` constraints keep their TP placement without
+    conflicting with the carry sharding (the historic §Perf C2 all-gather
+    regression — now closed; a post-compile check below asserts the slot
+    axis really was partitioned).
     """
-    from repro.core.chords import chords_init_carry, make_round_body
+    from repro.core.chords import ChordsCarry, make_slot_round_body
     from repro.core.ode import uniform_tgrid
     from repro.diffusion.wrapper import make_drift, wrapper_specs
+    from repro.launch.hlo_analysis import find_param_shape
     from repro.utils import pspec
 
-    k, b, s, ld = CHORDS_SHAPES[shape_name]
+    s_, k, b, seq, ld = CHORDS_SHAPES[shape_name]
     n_steps = 50
     rules = dict(SERVE_RULES)
     ctx = ShardingCtx(mesh, rules)
@@ -163,38 +178,52 @@ def _build_chords_cell(cfg: ModelConfig, shape_name: str, mesh, cfg_flops=None):
     pstructs = pspec.param_structs(wspecs, jnp.bfloat16)
     p_sh = _tree_shardings(ctx, pspec.logical_axes(wspecs), pstructs)
     tgrid = uniform_tgrid(n_steps)
-    i_arr = jnp.asarray([0, 2, 4, 8, 16, 24, 32, 40] + list(
+    i_row = jnp.asarray([0, 2, 4, 8, 16, 24, 32, 40] + list(
         range(41, 41 + max(0, k - 8))), jnp.int32)[:k]
 
-    lat_sh = ctx.sharding(("cores", "batch", "seq", None), (k, b, s, ld))
-    snap_sh = lat_sh
-    carry_structs = (
-        jax.ShapeDtypeStruct((k, b, s, ld), jnp.float32),
-    ) * 3 + (jax.ShapeDtypeStruct((k,), jnp.int32),) + (
-        jax.ShapeDtypeStruct((k, b, s, ld), jnp.float32),)
-    carry_sh = (lat_sh, snap_sh, snap_sh, None, lat_sh)
+    lat_dims = (s_, k, b, seq, ld)
+    lat_sh = ctx.sharding(("slots", "cores", "batch", "seq", None), lat_dims)
+    sk_sh = ctx.sharding(("slots", "cores"), (s_, k))
+    s_sh = ctx.sharding(("slots",), (s_,))
+    lat = jax.ShapeDtypeStruct(lat_dims, jnp.float32)
+    carry_structs = ChordsCarry(
+        x=lat, x_snap=lat, f_snap=lat,
+        p=jax.ShapeDtypeStruct((s_, k), jnp.int32), finals=lat)
+    carry_sh = ChordsCarry(x=lat_sh, x_snap=lat_sh, f_snap=lat_sh,
+                           p=sk_sh, finals=lat_sh)
 
-    def round_fn(params, carry, r):
+    def round_fn(params, carry, i_arr, r, live):
         drift = make_drift(params, cfg, attn_impl="chunked")
-        body = make_round_body(drift, tgrid, i_arr, n_steps, k)
-        new_carry, _ = body(carry, r)
+        body = make_slot_round_body(drift, tgrid, n_steps, k)
+        new_carry, _ = body(carry, i_arr, r, live)
         return new_carry
 
-    # NOTE (§Perf iteration C2): the drift runs under vmap over the cores
-    # axis; interior shard_act constraints are rank-blind to that axis and
-    # conflicted with the cores->data carry sharding, forcing whole-latent
-    # all-gathers every layer (confirmed 28.5s -> 0.x s collective term).
-    # The CHORDS round therefore relies on propagation from carry + param
-    # shardings only (no use_sharding context).
-    jitted = jax.jit(round_fn, in_shardings=(p_sh, carry_sh, None),
-                     out_shardings=carry_sh, donate_argnums=(1,))
-    lowered = jitted.lower(pstructs, carry_structs,
-                           jax.ShapeDtypeStruct((), jnp.int32))
-    compiled = lowered.compile()
+    with use_sharding(mesh, rules):
+        jitted = jax.jit(round_fn,
+                         in_shardings=(p_sh, carry_sh, sk_sh, s_sh, s_sh),
+                         out_shardings=carry_sh, donate_argnums=(1,))
+        lowered = jitted.lower(
+            pstructs, carry_structs,
+            jax.ShapeDtypeStruct((s_, k), jnp.int32),
+            jax.ShapeDtypeStruct((s_,), jnp.int32),
+            jax.ShapeDtypeStruct((s_,), jnp.bool_))
+        compiled = lowered.compile()
 
-    fake_shape = ShapeConfig(shape_name, s, k * b, "chords")
+    # post-compile pspec check: the carry latents must enter the partitioned
+    # program with the slot axis divided by the 'data' mesh size
+    dw = dict(mesh.shape)["data"]
+    want = [s_ // dw, k, b, seq, ld]
+    lat_params = [d for _, d in find_param_shape(compiled.as_text(), want)]
+    if want not in lat_params:
+        raise RuntimeError(
+            f"slot grid not sharded as intended: wanted per-device {want}, "
+            f"entry params have {lat_params[:6]}")
+
+    fake_shape = ShapeConfig(shape_name, seq, s_ * k * b, "chords")
     return _analyze(cfg, fake_shape, mesh, compiled, kind="chords",
-                    extra={"num_cores": k, "latent_dim": ld})
+                    extra={"num_slots": s_, "num_cores": k, "latent_dim": ld,
+                           "slot_shard_check": {"global": list(lat_dims),
+                                                "per_device": want}})
 
 
 def _n_eff_params(cfg: ModelConfig) -> float:
@@ -253,6 +282,7 @@ def _analyze(cfg, shape, mesh, compiled, kind: str, extra=None) -> dict:
                        "collective_bytes": coll},
         "global_flops": flops_w * chips,
         "model_flops": mf,
+        "n_params": float(model_api.param_count(cfg)),
         "useful_flops_ratio": mf / max(1.0, flops_w * chips),
         "roofline": terms,
         "memory_analysis": mem,

@@ -199,6 +199,37 @@ def hbm_bytes_estimate(hlo_text: str) -> float:
     return total
 
 
+_ENTRY_RE = re.compile(r"^ENTRY\s+\S+\s*\((?P<params>.*?)\)\s*->", re.M | re.S)
+_PARAM_RE = re.compile(
+    r"([\w.\-]+)\s*:\s*(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+
+
+def entry_param_shapes(hlo_text):
+    """Per-device shapes of the ENTRY computation's parameters.
+
+    In SPMD-partitioned optimized HLO these are the *local* shard shapes, so
+    comparing them against global shapes verifies that an input really was
+    partitioned the intended way (e.g. the slot axis divided by the 'data'
+    mesh size). Returns [(param_name, dtype, dims list)] in declaration order.
+    """
+    m = _ENTRY_RE.search(hlo_text)
+    if not m:
+        return []
+    return [(name, dt, [int(d) for d in dims.split(",") if d])
+            for name, dt, dims in _PARAM_RE.findall(m.group("params"))]
+
+
+def find_param_shape(hlo_text, global_dims):
+    """Entry params whose rank matches ``global_dims``; [(name, local_dims)].
+
+    Helper for sharding assertions: the caller checks the local dims are the
+    global dims divided by the expected mesh factors.
+    """
+    rank = len(global_dims)
+    return [(n, dims) for n, _, dims in entry_param_shapes(hlo_text)
+            if len(dims) == rank]
+
+
 # TPU v5e constants (assignment-provided)
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s / chip

@@ -1,23 +1,25 @@
 """Serving launcher: CHORDS-accelerated diffusion sampling service.
 
-Runs the streaming engine over a batch of queued requests and prints per-batch
-speedup/rounds stats (CPU-scale with --reduced; identical code path shards
-over the production mesh via the same drift closure).
+Default mode runs the continuous-batching slot runtime: requests stream into
+a fixed [S, K, ...] slot grid, free slots admit every lockstep round, and
+finished slots drain immediately. ``--static`` falls back to the padded
+static-batch engine for A/B comparison. CPU-scale with --reduced; the
+identical round body shards over the production mesh (slots on 'data') via
+the same drift closure under ``use_sharding``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch chords-dit-xl --reduced \
-      --requests 8 --steps 50 --cores 8
+      --requests 8 --steps 50 --cores 8 --slots 4
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.ode import uniform_tgrid
 from repro.diffusion import init_wrapper, make_drift
-from repro.serve import ChordsEngine, Request
+from repro.serve import ChordsEngine, ContinuousEngine, Request
 
 
 def main():
@@ -29,8 +31,11 @@ def main():
     ap.add_argument("--cores", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--latent-dim", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot count S (doubles as --static max_batch)")
     ap.add_argument("--rtol", type=float, default=0.05)
+    ap.add_argument("--static", action="store_true",
+                    help="serve with the static-batch engine instead")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -38,22 +43,44 @@ def main():
     drift = make_drift(params, cfg)
     tgrid = uniform_tgrid(args.steps)
 
-    engine = ChordsEngine(
-        drift_builder=drift,
-        latent_shape=(args.seq, args.latent_dim),
-        n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
-        max_batch=args.max_batch, rtol=args.rtol)
+    if args.static:
+        # the static engine stacks requests on axis 0, giving the drift its
+        # [B, S, L] batch; per-request latent is therefore (seq, dim)
+        engine = ChordsEngine(
+            drift_builder=drift, latent_shape=(args.seq, args.latent_dim),
+            n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
+            max_batch=args.slots, rtol=args.rtol)
+        for i in range(args.requests):
+            engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i)))
+        done = []
+        while engine.queue:
+            done += engine.step()
+        for s in engine.stats:
+            print(f"[serve] batch={s['batch']} rounds={s['rounds']} "
+                  f"speedup={s['speedup']:.2f} wall={s['wall_s']:.2f}s")
+        print(f"[serve] static: served {len(done)} requests in "
+              f"{engine.total_rounds()} rounds")
+        return
 
+    # one slot = one request = one drift call: the model consumes [B, S, L],
+    # so the per-slot latent carries an explicit batch-1 row
+    engine = ContinuousEngine(
+        drift=drift, latent_shape=(1, args.seq, args.latent_dim),
+        n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
+        num_slots=args.slots, rtol=args.rtol)
     for i in range(args.requests):
         engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i)))
-    done = []
-    while engine.queue:
-        done += engine.step()
-    for s in engine.stats:
-        print(f"[serve] batch={s['batch']} rounds={s['rounds']} "
-              f"speedup={s['speedup']:.2f} wall={s['wall_s']:.2f}s")
-    print(f"[serve] served {len(done)} requests; "
-          f"mean speedup {sum(s['speedup'] for s in engine.stats)/len(engine.stats):.2f}x")
+    done = engine.run_until_drained()
+    for rid, out in done:
+        print(f"[serve] request {rid:>3}: core {out.accepted_core} after "
+              f"{out.rounds_used}/{args.steps} rounds ({out.speedup:.2f}x, "
+              f"latency {out.latency_rounds} rounds)")
+    st = engine.stats()
+    print(f"[serve] served {st['served']} requests in {st['rounds_total']} "
+          f"rounds; throughput {st['throughput_req_per_round']:.3f} req/round, "
+          f"occupancy {st['occupancy']:.2f}, latency p50/p95 "
+          f"{st['latency_rounds_p50']:.0f}/{st['latency_rounds_p95']:.0f}, "
+          f"mean speedup {st['mean_speedup']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -58,11 +58,12 @@ def model_structs(cfg: ModelConfig):
             pspec.logical_axes(specs))
 
 
-def opt_structs(cfg: ModelConfig, opt_cfg: AdamWConfig):
+def opt_structs(cfg: ModelConfig, opt_cfg: AdamWConfig, grad_shards: int = 1):
     specs = model_api.model_specs(cfg)
     ps = pspec.param_structs(specs, jnp.dtype(cfg.param_dtype))
     ax = pspec.logical_axes(specs)
-    return state_structs(ps, opt_cfg), state_axes(ax, opt_cfg)
+    return (state_structs(ps, opt_cfg, grad_shards),
+            state_axes(ax, opt_cfg, grad_shards))
 
 
 def cache_structs(cfg: ModelConfig, shape: ShapeConfig):

@@ -46,8 +46,13 @@ def _master_copy(p):
     return jnp.array(p, dtype=jnp.float32, copy=True)
 
 
-def init_state(params: Tree, cfg: AdamWConfig) -> dict:
+def init_state(params: Tree, cfg: AdamWConfig, grad_shards: int = 1) -> dict:
+    """``grad_shards`` > 1 gives the error-feedback residual a leading [W]
+    dim: one residual per data shard, for the *wire* compression path where
+    each shard quantizes its own local gradient (see train_step)."""
     f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    errf = lambda p: jnp.zeros(
+        ((grad_shards,) if grad_shards > 1 else ()) + p.shape, jnp.float32)
     state = {
         "m": jax.tree_util.tree_map(f32, params),
         "v": jax.tree_util.tree_map(f32, params),
@@ -55,12 +60,15 @@ def init_state(params: Tree, cfg: AdamWConfig) -> dict:
         "step": jnp.zeros((), jnp.int32),
     }
     if cfg.compress_grads:
-        state["err"] = jax.tree_util.tree_map(f32, params)
+        state["err"] = jax.tree_util.tree_map(errf, params)
     return state
 
 
-def state_structs(param_structs: Tree, cfg: AdamWConfig) -> dict:
+def state_structs(param_structs: Tree, cfg: AdamWConfig,
+                  grad_shards: int = 1) -> dict:
     f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    errf = lambda p: jax.ShapeDtypeStruct(
+        ((grad_shards,) if grad_shards > 1 else ()) + p.shape, jnp.float32)
     s = {
         "m": jax.tree_util.tree_map(f32, param_structs),
         "v": jax.tree_util.tree_map(f32, param_structs),
@@ -68,11 +76,11 @@ def state_structs(param_structs: Tree, cfg: AdamWConfig) -> dict:
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
     if cfg.compress_grads:
-        s["err"] = jax.tree_util.tree_map(f32, param_structs)
+        s["err"] = jax.tree_util.tree_map(errf, param_structs)
     return s
 
 
-def state_axes(param_axes: Tree, cfg: AdamWConfig) -> dict:
+def state_axes(param_axes: Tree, cfg: AdamWConfig, grad_shards: int = 1) -> dict:
     ident = lambda a: a
     s = {
         "m": jax.tree_util.tree_map(ident, param_axes,
@@ -84,7 +92,12 @@ def state_axes(param_axes: Tree, cfg: AdamWConfig) -> dict:
         "step": (),
     }
     if cfg.compress_grads:
-        s["err"] = s["m"]
+        if grad_shards > 1:  # per-shard residual rides the data axis
+            s["err"] = jax.tree_util.tree_map(
+                lambda a: ("groups",) + tuple(a), param_axes,
+                is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            s["err"] = s["m"]
     return s
 
 
@@ -103,8 +116,15 @@ def _quantize_ef(g, err):
     return deq, gq - deq
 
 
-def apply_updates(params: Tree, grads: Tree, state: dict, cfg: AdamWConfig):
-    """One AdamW step (fp32 math on the ZeRO-sharded master copy)."""
+def apply_updates(params: Tree, grads: Tree, state: dict, cfg: AdamWConfig,
+                  reduced_err: Tree = None):
+    """One AdamW step (fp32 math on the ZeRO-sharded master copy).
+
+    ``reduced_err``: residual tree returned by a wire-level compressed
+    gradient collective (train_step's shard_map path). When given, the grads
+    are already int8-reduced on the wire, so the local quantization *model*
+    is skipped and the collective's per-shard residual is carried instead.
+    """
     step = state["step"]
     gnorm = _global_norm(grads)
     clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
@@ -112,11 +132,14 @@ def apply_updates(params: Tree, grads: Tree, state: dict, cfg: AdamWConfig):
 
     new_err = None
     if cfg.compress_grads:
-        pairs = jax.tree_util.tree_map(_quantize_ef, grads, state["err"])
-        grads = jax.tree_util.tree_map(lambda p: p[0], pairs,
-                                       is_leaf=lambda x: isinstance(x, tuple))
-        new_err = jax.tree_util.tree_map(lambda p: p[1], pairs,
-                                         is_leaf=lambda x: isinstance(x, tuple))
+        if reduced_err is not None:
+            new_err = reduced_err
+        else:
+            pairs = jax.tree_util.tree_map(_quantize_ef, grads, state["err"])
+            grads = jax.tree_util.tree_map(
+                lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            new_err = jax.tree_util.tree_map(
+                lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
 
     lr = lr_at(cfg, step)
     b1c = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)

@@ -1,2 +1,3 @@
-from repro.serve.engine import ChordsEngine, Request, SampleOut, StreamingSampler  # noqa: F401
+from repro.serve.engine import (ChordsEngine, ContinuousEngine, Request,  # noqa: F401
+                                SampleOut, SlotState, StreamingSampler)
 from repro.serve.steps import greedy_generate, make_decode_step, make_prefill  # noqa: F401

@@ -1,24 +1,38 @@
-"""CHORDS serving engine: streaming early-exit sampling + request batching.
+"""CHORDS serving runtimes: streaming early-exit sampling + two batching modes.
 
 ``StreamingSampler`` runs Algorithm 1 inside a single jitted ``while_loop``
 that stops as soon as two consecutive streamed outputs agree within rtol
-(paper Section 5 "diffusion streaming") — the deployment path, where rounds
-not executed are wall-clock saved. ``ChordsEngine`` batches queued requests
-up to max_batch and serves them through the sampler.
+(paper Section 5 "diffusion streaming") — rounds not executed are wall-clock
+saved. ``ChordsEngine`` is the *static-batch* server around it: queued
+requests are padded to a fixed ``max_batch`` (one jit trace, ever) and the
+batch is held until its slowest request converges.
+
+``ContinuousEngine`` is the production runtime: a fixed ``[S, K, ...]``
+slot×core grid (``repro.core.chords.make_slot_round_body``) where every
+engine round advances all live slots by one lockstep round, an admission
+queue feeds free slots *every round* (``reset_slots`` re-initializes the
+lane in place — no retrace), finished slots drain immediately, and per-slot
+accept state (rtol, init sequence from request priority, round counter) rides
+the jitted :class:`SlotState`. Requests therefore never queue behind a
+straggler in another lane. See ``src/repro/serve/README.md`` for the slot
+lifecycle and S×K sizing guidance.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scheduler
-from repro.core.chords import chords_init_carry, make_round_body
-from repro.core.init_sequence import make_sequence
+from repro.core.chords import (ChordsCarry, accept_test, bmask,
+                               chords_init_carry, make_round_body,
+                               make_slot_round_body, reset_slots,
+                               slot_init_carry)
+from repro.core.init_sequence import default_speedup, make_sequence
 
 
 @dataclasses.dataclass
@@ -28,6 +42,7 @@ class SampleOut:
     rounds_used: object  # int, or [B] array when batched
     accepted_core: object
     speedup: object
+    latency_rounds: Optional[int] = None  # queue wait + compute (engines only)
 
 
 class StreamingSampler:
@@ -39,6 +54,10 @@ class StreamingSampler:
     converged (or all N rounds ran). A whole-batch norm would let one
     converged request accept the entire batch — and a single stiff request
     hold every other one hostage.
+
+    ``sample(x0, live=...)`` masks out padding rows: dead rows are born
+    pre-accepted so they can never extend the while_loop, which is what lets
+    ``ChordsEngine`` pad partial batches to a fixed shape (single jit trace).
     """
 
     def __init__(self, drift, n_steps: int, num_cores: int, tgrid,
@@ -53,39 +72,28 @@ class StreamingSampler:
         self.rtol = rtol
         self.drift = drift
         self.batched = batched
-        self._jitted = None
+        self._jitted = jax.jit(self._run)
 
-    def _build(self, x0):
-        round_body = make_round_body(self.drift, self.tgrid, self.i_arr, self.n,
-                                     self.k)
+    def _run(self, x0, live):
+        round_body = make_round_body(self.drift, self.tgrid, self.i_arr,
+                                     self.n, self.k)
         emit = jnp.asarray(scheduler.emit_rounds(self.i_seq, self.n))
-        rtol = self.rtol
-        n = self.n
-        batched = self.batched
-
-        def norms(a):  # residual norm per request (or over the whole latent)
-            axes = tuple(range(1, a.ndim)) if batched else None
-            return jnp.sqrt(jnp.sum(a * a, axis=axes))
-
-        def rmask(m, a):  # broadcast a per-request mask over latent dims
-            return m.reshape(m.shape + (1,) * (a.ndim - m.ndim))
-
+        rtol, n, batched = self.rtol, self.n, self.batched
+        bdim = 1 if batched else 0
         def cond(state):
-            carry, r, accepted = state[0], state[1], state[2]
+            _, r, accepted = state[0], state[1], state[2]
             return (~jnp.all(accepted)) & (r <= n)
 
         def body(state):
             (carry, r, accepted, last_out, has_last, chosen, rounds,
              result) = state
             carry, _ = round_body(carry, r)
-            x = carry[0]
             emitted_k = jnp.argmax(emit == r)  # core emitting this round (if any)
             any_emit = jnp.any(emit == r)
-            out = x[emitted_k]
-            num = norms(out - last_out)
-            den = norms(out) + 1e-12
-            ok = any_emit & has_last & (num / den < rtol) & (~accepted)
-            result = jnp.where(rmask(ok, out), out, result)
+            out = carry.x[emitted_k]
+            ok = any_emit & has_last & accept_test(out, last_out, rtol, bdim) \
+                & (~accepted)
+            result = jnp.where(bmask(ok, out), out, result)
             rounds = jnp.where(ok, r, rounds)
             chosen = jnp.where(ok, emitted_k, chosen)
             accepted = accepted | ok
@@ -94,28 +102,25 @@ class StreamingSampler:
             return (carry, r + 1, accepted, last_out, has_last, chosen,
                     rounds, result)
 
-        def run(x0):
-            req_shape = (x0.shape[0],) if batched else ()
-            carry = chords_init_carry(x0, self.i_arr, self.k)
-            state = (carry, jnp.asarray(1),
-                     jnp.zeros(req_shape, bool), jnp.zeros_like(x0),
-                     jnp.asarray(False), jnp.zeros(req_shape, jnp.int32),
-                     jnp.zeros(req_shape, jnp.int32), jnp.zeros_like(x0))
-            (carry, r, accepted, last_out, _, chosen, rounds,
-             result) = jax.lax.while_loop(cond, body, state)
-            # requests that never early-exited take the final emission —
-            # core 0's full-round output, i.e. the sequential solve
-            result = jnp.where(rmask(accepted, result), result, last_out)
-            rounds = jnp.where(accepted, rounds, n)
-            chosen = jnp.where(accepted, chosen, 0)
-            return result, rounds, chosen
+        carry = chords_init_carry(x0, self.i_arr, self.k)
+        state = (carry, jnp.asarray(1),
+                 ~live, jnp.zeros_like(x0),
+                 jnp.asarray(False), jnp.zeros(live.shape, jnp.int32),
+                 jnp.zeros(live.shape, jnp.int32), jnp.zeros_like(x0))
+        (carry, r, accepted, last_out, _, chosen, rounds,
+         result) = jax.lax.while_loop(cond, body, state)
+        # requests that never early-exited take the final emission —
+        # core 0's full-round output, i.e. the sequential solve
+        fell_through = live & (rounds == 0)
+        result = jnp.where(bmask(fell_through, result), last_out, result)
+        rounds = jnp.where(fell_through, n, rounds)
+        return result, rounds, chosen
 
-        return jax.jit(run)
-
-    def sample(self, x0) -> SampleOut:
-        if self._jitted is None:
-            self._jitted = self._build(x0)
-        out, rounds, chosen = self._jitted(x0)
+    def sample(self, x0, live=None) -> SampleOut:
+        req_shape = (x0.shape[0],) if self.batched else ()
+        if live is None:
+            live = jnp.ones(req_shape, bool)
+        out, rounds, chosen = self._jitted(x0, live)
         if self.batched:
             rounds = np.asarray(rounds)
             return SampleOut(out, rounds, np.asarray(chosen),
@@ -123,16 +128,31 @@ class StreamingSampler:
         rounds = int(rounds)
         return SampleOut(out, rounds, int(chosen), self.n / max(1, rounds))
 
+    @property
+    def num_traces(self) -> int:
+        """Distinct jit traces so far (tests assert padding keeps this at 1).
+        Falls back to 1 if the (private) jax cache probe ever disappears."""
+        probe = getattr(self._jitted, "_cache_size", None)
+        return int(probe()) if callable(probe) else 1
+
 
 @dataclasses.dataclass
 class Request:
     rid: int
     key: jax.Array
     cond: Optional[object] = None
+    priority: int = 0  # higher = more aggressive init sequence (earlier exit)
+    rtol: Optional[float] = None  # per-request accept tolerance
 
 
 class ChordsEngine:
-    """Batched request server around the streaming sampler."""
+    """Static-batch request server around the streaming sampler.
+
+    A batch is held until its *slowest* request converges — the baseline the
+    continuous-batching runtime is measured against. Partial batches are
+    padded to ``max_batch`` with a live-mask so every call hits the same jit
+    trace (``sampler.num_traces == 1`` no matter the arrival pattern).
+    """
 
     def __init__(self, drift_builder: Callable, latent_shape: tuple,
                  n_steps: int, num_cores: int, tgrid, max_batch: int = 8,
@@ -153,19 +173,255 @@ class ChordsEngine:
         if not self.queue:
             return []
         batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch:]
-        keys = jnp.stack([r.key for r in batch])
+        pad = self.max_batch - len(batch)
+        keys = jnp.stack([r.key for r in batch] + [batch[0].key] * pad)
         noise = jax.vmap(
             lambda kk: jax.random.normal(kk, self.latent_shape))(keys)
+        live = jnp.asarray([True] * len(batch) + [False] * pad)
         t0 = time.perf_counter()
-        out = self.sampler.sample(noise)
+        out = self.sampler.sample(noise, live=live)
         dt = time.perf_counter() - t0
         # the lockstep loop runs until the *slowest* request converges; the
         # batch's wall-clock rounds is therefore the per-request max
-        self.stats.append({"batch": len(batch),
-                           "rounds": int(np.max(out.rounds_used)),
-                           "speedup": float(np.min(out.speedup)),
+        real = np.arange(len(batch))
+        self.stats.append({"batch": len(batch), "padded": pad,
+                           "rounds": int(np.max(out.rounds_used[real])),
+                           "speedup": float(np.min(out.speedup[real])),
                            "wall_s": dt})
         return [(r.rid, SampleOut(out.sample[i], int(out.rounds_used[i]),
                                   int(out.accepted_core[i]),
                                   float(out.speedup[i])))
                 for i, r in enumerate(batch)]
+
+    def total_rounds(self) -> int:
+        """Rounds-to-drain: static batches run back-to-back."""
+        return int(sum(s["rounds"] for s in self.stats))
+
+
+class SlotState(NamedTuple):
+    """Device-side state of the continuous-batching slot grid (a pytree)."""
+
+    carry: ChordsCarry     # [S, K, ...] lockstep grid
+    i_arr: jax.Array       # [S, K] per-slot init sequence
+    rtol: jax.Array        # [S] per-slot accept tolerance
+    rounds: jax.Array      # [S] next lockstep round for each slot (1-based)
+    live: jax.Array        # [S] slot occupied and still iterating
+    done: jax.Array        # [S] converged, result buffered for drain
+    has_last: jax.Array    # [S] a previous streamed output exists
+    last_out: jax.Array    # [S, ...] latest streamed output per slot
+    result: jax.Array      # [S, ...] accepted output (valid where done)
+    rounds_used: jax.Array  # [S] lockstep rounds at accept
+    chosen: jax.Array      # [S] accepted core index
+
+
+class ContinuousEngine:
+    """Continuous-batching CHORDS runtime over a fixed [S, K, ...] slot grid.
+
+    Every ``step()``: (1) admit queued requests into free slots (masked
+    ``reset_slots`` — no retrace, in-flight lanes untouched), (2) run ONE
+    lockstep round for all live slots inside a single jitted call (per-slot
+    round counters, per-slot rtol accept against the previous streamed
+    arrival, per-slot init sequence from request priority), (3) drain slots
+    whose accept fired. A request's output is identical whether its slot is
+    fresh or recycled, and a slot running K==1 degenerates to the sequential
+    solver (tested invariants).
+
+    ``num_cores`` is K for every slot; ``num_slots`` is S. On a mesh, size S
+    to the 'data' axis (slots shard over it under ``use_sharding``) and K×
+    the per-slot latent to what one shard's HBM holds — see serve/README.md.
+    """
+
+    def __init__(self, drift: Callable, latent_shape: tuple, n_steps: int,
+                 num_cores: int, tgrid, num_slots: int = 4, rtol: float = 0.05,
+                 priority_speedup: float = 1.25):
+        self.latent_shape = tuple(latent_shape)
+        self.n = n_steps
+        self.k = num_cores
+        self.s = num_slots
+        self.rtol = rtol
+        self.priority_speedup = priority_speedup
+        self._i_seq_cache: Dict[int, list] = {}
+        self._slot_round = make_slot_round_body(drift, tgrid, n_steps, num_cores)
+        self._round = jax.jit(self._round_fn)
+        self._admit = jax.jit(self._admit_fn)
+        self.state = self._init_state()
+        self.queue: List[Request] = []
+        self._slot_req: List[Optional[Request]] = [None] * num_slots
+        self._admit_round: List[int] = [0] * num_slots
+        self._submit_round: Dict[int, int] = {}
+        self.round_count = 0
+        self._live_sum = 0  # occupancy numerator
+        self._latencies: List[int] = []
+        self._served: List[Tuple[int, SampleOut]] = []
+
+    # -- device programs ------------------------------------------------------
+
+    def _init_state(self) -> SlotState:
+        s, k = self.s, self.k
+        lat = jnp.zeros((s,) + self.latent_shape, jnp.float32)
+        return SlotState(
+            carry=slot_init_carry(s, k, self.latent_shape),
+            i_arr=jnp.zeros((s, k), jnp.int32),
+            rtol=jnp.full((s,), self.rtol, jnp.float32),
+            rounds=jnp.ones((s,), jnp.int32),
+            live=jnp.zeros((s,), bool),
+            done=jnp.zeros((s,), bool),
+            has_last=jnp.zeros((s,), bool),
+            last_out=lat, result=lat,
+            rounds_used=jnp.zeros((s,), jnp.int32),
+            chosen=jnp.zeros((s,), jnp.int32),
+        )
+
+    def _round_fn(self, st: SlotState) -> SlotState:
+        """One lockstep round for every live slot + per-slot accept test."""
+        active = st.live
+        carry, _ = self._slot_round(st.carry, st.i_arr, st.rounds, active)
+        emit = scheduler.emit_rounds_jnp(st.i_arr, self.n)  # [S, K]
+        r = st.rounds
+        hit = (emit == r[:, None]) & active[:, None]
+        any_emit = jnp.any(hit, axis=1)
+        ek = jnp.argmax(hit, axis=1).astype(jnp.int32)  # slowest emitter wins
+        out = carry.x[jnp.arange(self.s), ek]  # [S, ...]
+
+        ok = any_emit & st.has_last & accept_test(out, st.last_out, st.rtol, 1)
+        # core 0's emission is the exact sequential solve: force-accept it so
+        # no request outlives its own N rounds
+        final = any_emit & (r >= emit[:, 0])
+        acc = (ok | final) & active
+        result = jnp.where(bmask(acc, out), out, st.result)
+        return SlotState(
+            carry=carry,
+            i_arr=st.i_arr,
+            rtol=st.rtol,
+            rounds=jnp.where(active, r + 1, r),
+            live=st.live & ~acc,
+            done=st.done | acc,
+            has_last=st.has_last | any_emit,
+            last_out=jnp.where(bmask(any_emit, out), out, st.last_out),
+            result=result,
+            rounds_used=jnp.where(acc, r, st.rounds_used),
+            chosen=jnp.where(acc, ek, st.chosen),
+        )
+
+    def _admit_fn(self, st: SlotState, mask, x0, i_arr, rtol) -> SlotState:
+        """Masked admission: reset lanes + per-slot accept state in place."""
+        carry = reset_slots(st.carry, mask, x0, i_arr)
+        m_lat = bmask(mask, st.last_out)
+        return SlotState(
+            carry=carry,
+            i_arr=jnp.where(mask[:, None], i_arr, st.i_arr),
+            rtol=jnp.where(mask, rtol, st.rtol),
+            rounds=jnp.where(mask, 1, st.rounds),
+            live=st.live | mask,
+            done=st.done & ~mask,
+            has_last=st.has_last & ~mask,
+            last_out=jnp.where(m_lat, 0.0, st.last_out),
+            result=jnp.where(m_lat, 0.0, st.result),
+            rounds_used=jnp.where(mask, 0, st.rounds_used),
+            chosen=jnp.where(mask, 0, st.chosen),
+        )
+
+    # -- host loop ------------------------------------------------------------
+
+    def _i_seq_for(self, priority: int) -> list:
+        seq = self._i_seq_cache.get(priority)
+        if seq is None:
+            if priority <= 0:
+                seq = make_sequence(self.k, self.n)
+            else:
+                target = default_speedup(self.k, self.n) \
+                    * self.priority_speedup ** priority
+                seq = make_sequence(self.k, self.n, mode="theorem",
+                                    target_speedup=target)
+            self._i_seq_cache[priority] = seq
+        return seq
+
+    @property
+    def has_inflight(self) -> bool:
+        """Any slot occupied (queued requests not included)."""
+        return any(r is not None for r in self._slot_req)
+
+    def submit(self, req: Request):
+        self._submit_round[req.rid] = self.round_count
+        self.queue.append(req)
+
+    def step(self) -> list[tuple[int, SampleOut]]:
+        """Admit → one lockstep round → drain. Returns newly finished."""
+        free = [i for i, r in enumerate(self._slot_req) if r is None]
+        if self.queue and free:
+            admit = self.queue[: len(free)]
+            self.queue = self.queue[len(admit):]
+            mask = np.zeros(self.s, bool)
+            x0 = np.zeros((self.s,) + self.latent_shape, np.float32)
+            i_arr = np.zeros((self.s, self.k), np.int32)
+            rtol = np.asarray(jax.device_get(self.state.rtol)).copy()
+            for slot, req in zip(free, admit):
+                mask[slot] = True
+                x0[slot] = np.asarray(
+                    jax.random.normal(req.key, self.latent_shape))
+                i_arr[slot] = self._i_seq_for(req.priority)
+                rtol[slot] = self.rtol if req.rtol is None else req.rtol
+                self._slot_req[slot] = req
+                self._admit_round[slot] = self.round_count
+            self.state = self._admit(self.state, jnp.asarray(mask),
+                                     jnp.asarray(x0), jnp.asarray(i_arr),
+                                     jnp.asarray(rtol))
+        if not self.has_inflight:
+            return []
+
+        self._live_sum += sum(r is not None for r in self._slot_req)
+        self.state = self._round(self.state)
+        self.round_count += 1
+
+        done = np.asarray(jax.device_get(self.state.done))
+        out: list[tuple[int, SampleOut]] = []
+        for slot in range(self.s):
+            req = self._slot_req[slot]
+            if req is None or not done[slot]:
+                continue
+            rounds_used = int(self.state.rounds_used[slot])
+            wait = self._admit_round[slot] - self._submit_round.pop(req.rid)
+            latency = wait + rounds_used
+            res = SampleOut(
+                sample=jax.device_get(self.state.result[slot]),
+                rounds_used=rounds_used,
+                accepted_core=int(self.state.chosen[slot]),
+                speedup=self.n / max(1, rounds_used),
+                latency_rounds=latency,
+            )
+            self._latencies.append(latency)
+            self._served.append((req.rid, res))
+            out.append((req.rid, res))
+            self._slot_req[slot] = None  # slot is free; done flag stays until
+            # the next admission clears it (the lane is frozen meanwhile)
+        return out
+
+    def run_until_drained(self, max_rounds: Optional[int] = None
+                          ) -> list[tuple[int, SampleOut]]:
+        """Step until queue and grid are empty; returns all (rid, SampleOut)."""
+        budget = max_rounds if max_rounds is not None else \
+            (len(self.queue) + self.s) * (self.n + 1)
+        limit = self.round_count + budget  # relative: engines are long-lived
+        served: list[tuple[int, SampleOut]] = []
+        while self.queue or self.has_inflight:
+            served += self.step()
+            if self.round_count >= limit:
+                raise RuntimeError(
+                    f"engine did not drain within {budget} rounds")
+        return served
+
+    def stats(self) -> dict:
+        """Throughput + latency percentiles, all in lockstep-round units."""
+        lat = np.asarray(self._latencies, np.float64)
+        served = len(self._latencies)
+        rounds = max(1, self.round_count)
+        return {
+            "served": served,
+            "rounds_total": self.round_count,
+            "throughput_req_per_round": served / rounds,
+            "occupancy": self._live_sum / (rounds * self.s),
+            "latency_rounds_p50": float(np.percentile(lat, 50)) if served else 0.0,
+            "latency_rounds_p95": float(np.percentile(lat, 95)) if served else 0.0,
+            "mean_speedup": float(np.mean([o.speedup for _, o in self._served])
+                                  ) if served else 0.0,
+        }

@@ -1,0 +1,146 @@
+"""Continuous-batching slot runtime invariants.
+
+The load-bearing ones:
+
+* slot recycling is invisible — a request admitted into a recycled slot is
+  bit-identical to the same request served by a fresh engine (same jitted
+  program, masked ``reset_slots`` fully re-initializes the lane);
+* K==1 degenerates to the sequential solver per slot (the paper's
+  "last output identical to no-acceleration" guarantee, per lane);
+* continuous batching beats the static-batch engine on rounds-to-drain for a
+  staggered arrival trace while leaving per-request outputs unchanged.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sequential_sample, uniform_tgrid
+from repro.serve import ChordsEngine, ContinuousEngine, Request
+
+N, K = 20, 4
+LAM = jnp.linspace(0.05, 3.0, 6)
+
+
+def _drift(x, t):
+    return -x * LAM
+
+
+def _engine(num_slots=2, num_cores=K, rtol=0.1, **kw):
+    return ContinuousEngine(_drift, latent_shape=(6,), n_steps=N,
+                            num_cores=num_cores, tgrid=uniform_tgrid(N, 0.98),
+                            num_slots=num_slots, rtol=rtol, **kw)
+
+
+def _serve_one(engine, rid):
+    engine.submit(Request(rid=rid, key=jax.random.PRNGKey(1000 + rid)))
+    [(got, out)] = engine.run_until_drained()
+    assert got == rid
+    return out
+
+
+def test_recycled_slot_bit_identical_to_fresh():
+    """Serve 5 requests through 2 slots (forcing recycling), then re-serve
+    each through a fresh engine: samples must be bitwise equal."""
+    eng = _engine(num_slots=2)
+    for i in range(5):
+        eng.submit(Request(rid=i, key=jax.random.PRNGKey(1000 + i)))
+    served = dict(eng.run_until_drained())
+    assert len(served) == 5
+    for rid, out in served.items():
+        fresh = _serve_one(_engine(num_slots=2), rid)
+        np.testing.assert_array_equal(np.asarray(out.sample),
+                                      np.asarray(fresh.sample))
+        assert out.rounds_used == fresh.rounds_used
+        assert out.accepted_core == fresh.accepted_core
+
+
+def test_k1_slot_equals_sequential():
+    """A K==1 slot has no rectification and no early exit: it must emit the
+    sequential Euler solve at round N, from any (recycled) slot."""
+    eng = _engine(num_slots=2, num_cores=1)
+    for i in range(3):
+        eng.submit(Request(rid=i, key=jax.random.PRNGKey(2000 + i)))
+    served = dict(eng.run_until_drained())
+    tg = uniform_tgrid(N, 0.98)
+    for rid, out in served.items():
+        x0 = jax.random.normal(jax.random.PRNGKey(2000 + rid), (6,))
+        seq = sequential_sample(_drift, x0, tg)
+        np.testing.assert_allclose(np.asarray(out.sample), np.asarray(seq),
+                                   atol=1e-6)
+        assert out.rounds_used == N and out.accepted_core == 0
+
+
+def test_continuous_beats_static_on_staggered_trace():
+    reqs = [Request(rid=i, key=jax.random.PRNGKey(3000 + i)) for i in range(8)]
+    arrivals = [3 * i for i in range(8)]
+    tg = uniform_tgrid(N, 0.98)
+
+    static = ChordsEngine(_drift, latent_shape=(6,), n_steps=N, num_cores=K,
+                          tgrid=tg, max_batch=2, rtol=0.1)
+    s_done, clock, pending = {}, 0, list(zip(arrivals, reqs))
+    while pending or static.queue:
+        while pending and pending[0][0] <= clock:
+            static.submit(pending.pop(0)[1])
+        if not static.queue:
+            clock = pending[0][0]
+            continue
+        s_done.update(dict(static.step()))
+        clock += static.stats[-1]["rounds"]
+
+    cont = _engine(num_slots=2)
+    c_done, pending = {}, list(zip(arrivals, reqs))
+    while pending or cont.queue or cont.has_inflight:
+        while pending and pending[0][0] <= cont.round_count:
+            cont.submit(pending.pop(0)[1])
+        c_done.update(dict(cont.step()))
+        assert cont.round_count < 10_000
+
+    assert len(c_done) == len(s_done) == 8
+    # scheduling changed, results did not
+    for rid in s_done:
+        np.testing.assert_allclose(np.asarray(s_done[rid].sample),
+                                   np.asarray(c_done[rid].sample), atol=1e-5)
+        assert s_done[rid].rounds_used == c_done[rid].rounds_used
+    assert cont.round_count < clock, (cont.round_count, clock)
+
+
+def test_static_engine_single_trace_across_batch_sizes():
+    """Padding partial batches to max_batch keeps ChordsEngine on ONE jit
+    trace for any arrival pattern (the retracing regression)."""
+    tg = uniform_tgrid(N, 0.98)
+    eng = ChordsEngine(_drift, latent_shape=(6,), n_steps=N, num_cores=K,
+                       tgrid=tg, max_batch=4, rtol=0.1)
+    done = []
+    for batch_size in (3, 4, 1):
+        for i in range(batch_size):
+            eng.submit(Request(rid=len(done) + i, key=jax.random.PRNGKey(i)))
+        done += eng.step()
+    assert len(done) == 8
+    assert eng.sampler.num_traces == 1
+    assert eng.stats[0]["padded"] == 1 and eng.stats[2]["padded"] == 3
+
+
+def test_per_request_priority_and_rtol():
+    """priority>0 requests run a more aggressive init sequence (earlier
+    fastest-core emission); rtol=0 forces the exact sequential fallback."""
+    eng = _engine(num_slots=2)
+    assert eng._i_seq_for(2)[-1] > eng._i_seq_for(0)[-1]
+
+    exact = _serve_one(_engine(num_slots=1), 7)
+    eng2 = _engine(num_slots=1)
+    eng2.submit(Request(rid=7, key=jax.random.PRNGKey(1007), rtol=0.0))
+    [(_, strict)] = eng2.run_until_drained()
+    assert strict.rounds_used == N and strict.accepted_core == 0
+    assert strict.rounds_used >= exact.rounds_used
+
+
+def test_stats_report_throughput_and_latency():
+    eng = _engine(num_slots=2)
+    for i in range(5):
+        eng.submit(Request(rid=i, key=jax.random.PRNGKey(4000 + i)))
+    eng.run_until_drained()
+    st = eng.stats()
+    assert st["served"] == 5
+    assert st["throughput_req_per_round"] == 5 / st["rounds_total"]
+    assert 0 < st["latency_rounds_p50"] <= st["latency_rounds_p95"]
+    assert 0 < st["occupancy"] <= 1.0
