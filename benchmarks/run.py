@@ -6,8 +6,12 @@ results/dryrun/*.json exist (produced by ``python -m repro.launch.dryrun --all``
 
 ``--serve-smoke`` runs the CI-sized continuous-batching throughput check: a
 tiny analytic drift through the real ``ContinuousEngine`` API (so any
-engine-API import/signature break fails the tier-1 job), asserting the slot
-runtime drains a staggered request set and beats the static-batch engine.
+engine-API import/signature break fails the tier-1 job), asserting (1) the
+slot runtime drains a staggered request set and beats the static-batch
+engine, and (2) on the SLA demo trace every scheduling policy drains with
+``edf-preempt`` meeting strictly more deadlines than ``fifo`` while
+non-preempted outputs stay bitwise identical across policies. Per-policy
+stats land in results/serve_smoke.json (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
@@ -16,14 +20,19 @@ import sys
 
 def serve_smoke() -> dict:
     """CPU-scale continuous-batching smoke benchmark (CI tier-1)."""
+    import json
+    import os
     import time
 
     import jax
     import jax.numpy as jnp
     import numpy as np
 
+    from benchmarks.common import RESULTS_DIR
     from repro.core import uniform_tgrid
     from repro.serve import ChordsEngine, ContinuousEngine, Request
+    from repro.serve.sched.workload import (drive, sla_demo_trace,
+                                            sla_engine_kwargs)
 
     n, k, slots, n_req = 16, 4, 2, 6
     tg = uniform_tgrid(n, 0.98)
@@ -53,13 +62,44 @@ def serve_smoke() -> dict:
     assert st["rounds_total"] <= static.total_rounds(), (
         st["rounds_total"], static.total_rounds())
 
+    # -- SLA scheduling policies over the shared staggered demo trace --------
+    policy_stats, outputs, preempted = {}, {}, {}
+    for policy in ("fifo", "edf", "edf-preempt"):
+        eng = ContinuousEngine(drift, latent_shape=(4,), n_steps=n,
+                               num_cores=k, tgrid=tg, num_slots=slots,
+                               rtol=0.3, policy=policy,
+                               **sla_engine_kwargs(n))
+        reqs, arrivals = sla_demo_trace(n)
+        outputs[policy] = drive(eng, reqs, arrivals)
+        preempted[policy] = set(eng.preempted_rids)
+        policy_stats[policy] = eng.stats()
+        s = policy_stats[policy]
+        print(f"serve_smoke[{policy}],misses={s['deadline_misses']}/"
+              f"{s['deadline_total']},rounds={s['rounds_total']},"
+              f"preemptions={s['preemptions']},host_syncs={s['host_syncs']}")
+    assert policy_stats["edf-preempt"]["deadline_misses"] \
+        < policy_stats["fifo"]["deadline_misses"], policy_stats
+    assert policy_stats["edf"]["deadline_misses"] \
+        <= policy_stats["fifo"]["deadline_misses"], policy_stats
+    for policy in ("edf", "edf-preempt"):  # scheduling never changes results
+        for rid, o in outputs[policy].items():
+            if rid in preempted[policy]:
+                continue
+            assert np.array_equal(np.asarray(o.sample),
+                                  np.asarray(outputs["fifo"][rid].sample)), \
+                (policy, rid)
+
     out = {"requests": n_req, "rounds_total": st["rounds_total"],
            "static_rounds": static.total_rounds(),
            "throughput_req_per_round": st["throughput_req_per_round"],
            "latency_p50": st["latency_rounds_p50"],
            "latency_p95": st["latency_rounds_p95"],
-           "wall_s": wall}
-    print("serve_smoke," + ",".join(f"{k}={v}" for k, v in out.items()))
+           "wall_s": wall,
+           "sla_policies": policy_stats}
+    with open(os.path.join(RESULTS_DIR, "serve_smoke.json"), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print("serve_smoke," + ",".join(
+        f"{k}={v}" for k, v in out.items() if k != "sla_policies"))
     return out
 
 

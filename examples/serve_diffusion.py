@@ -14,7 +14,15 @@ staggered/mixed-difficulty trace) and checks that per-request outputs match
 between the two engines — continuous batching changes scheduling, never
 results.
 
+``--policy {fifo,edf,edf-preempt}`` picks the admission policy for the
+continuous engine (no-op on the default deadline-free trace: with no
+deadlines every policy degenerates to FIFO). ``--sla`` switches to the
+staggered SLA trace (``repro.serve.sched.workload``) and compares the chosen
+policy against FIFO and the static engine: deadline-miss rate, preemption
+count, and bit-identity of every non-preempted request's output.
+
   PYTHONPATH=src python examples/serve_diffusion.py --requests 12 --cores 8
+  PYTHONPATH=src python examples/serve_diffusion.py --sla --policy edf-preempt
 """
 import argparse
 
@@ -23,6 +31,8 @@ import numpy as np
 
 from repro.core import GaussianMixture, uniform_tgrid
 from repro.serve import ChordsEngine, ContinuousEngine, Request
+from repro.serve.sched.workload import (drive, sla_demo_trace,
+                                        sla_engine_kwargs)
 
 
 def make_requests(n_requests: int, arrive_every: int):
@@ -65,6 +75,51 @@ def serve_continuous(engine: ContinuousEngine, reqs, arrivals):
     return done, engine.round_count
 
 
+def serve_sla(args, gm, tgrid):
+    """SLA trace: static ground truth + fifo vs --policy miss rates."""
+    reqs, arrivals = sla_demo_trace(args.steps)
+
+    static = ChordsEngine(gm.drift, latent_shape=tuple(args.latent),
+                          n_steps=args.steps, num_cores=args.cores,
+                          tgrid=tgrid, max_batch=args.max_batch, rtol=0.0)
+    for r in reqs:
+        static.submit(r)
+    truth = {}
+    while static.queue:
+        truth.update(dict(static.step()))
+
+    results = {}
+    for policy in dict.fromkeys(["fifo", args.policy]):
+        eng = ContinuousEngine(gm.drift, latent_shape=tuple(args.latent),
+                               n_steps=args.steps, num_cores=args.cores,
+                               tgrid=tgrid, num_slots=args.max_batch,
+                               rtol=0.0, policy=policy,
+                               **sla_engine_kwargs(args.steps))
+        out = drive(eng, list(reqs), list(arrivals))
+        st = eng.stats()
+        results[policy] = (eng, out, st)
+        print(f"[serve:sla] {policy:12s} deadline misses "
+              f"{st['deadline_misses']}/{st['deadline_total']} "
+              f"(rate {st['deadline_miss_rate']:.2f}), "
+              f"{st['preemptions']} preemptions "
+              f"({st['preempted_rounds_wasted']} rounds wasted), "
+              f"{st['rounds_total']} rounds to drain")
+        # scheduling never changes results: every request this policy did
+        # not preempt is BITWISE the static engine's output
+        for rid, o in out.items():
+            if rid in eng.preempted_rids:
+                continue
+            assert np.array_equal(np.asarray(o.sample),
+                                  np.asarray(truth[rid].sample)), (policy, rid)
+    fifo_st, pol_st = results["fifo"][2], results[args.policy][2]
+    if args.policy != "fifo":
+        print(f"[serve:sla] {args.policy} vs fifo: "
+              f"{pol_st['deadline_misses']} vs {fifo_st['deadline_misses']} "
+              f"misses at {pol_st['rounds_total']} vs "
+              f"{fifo_st['rounds_total']} total rounds; non-preempted "
+              f"outputs bitwise identical to the static engine")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
@@ -77,11 +132,18 @@ def main():
                     help="rounds between request arrivals")
     ap.add_argument("--latent", type=int, nargs=2, default=(64, 16),
                     metavar=("SEQ", "DIM"))
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "edf", "edf-preempt"])
+    ap.add_argument("--sla", action="store_true",
+                    help="run the deadline demo trace instead")
     args = ap.parse_args()
 
     gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=6,
                                 dim=args.latent[1])
     tgrid = uniform_tgrid(args.steps, 0.98)
+    if args.sla:
+        serve_sla(args, gm, tgrid)
+        return
     reqs, arrivals = make_requests(args.requests, args.arrive_every)
 
     static = ChordsEngine(gm.drift, latent_shape=tuple(args.latent),
@@ -93,7 +155,7 @@ def main():
     cont = ContinuousEngine(gm.drift, latent_shape=tuple(args.latent),
                             n_steps=args.steps, num_cores=args.cores,
                             tgrid=tgrid, num_slots=args.max_batch,
-                            rtol=args.rtol)
+                            rtol=args.rtol, policy=args.policy)
     cont_out, cont_rounds = serve_continuous(cont, reqs, arrivals)
 
     for rid, out in sorted(cont_out.items()):

@@ -8,12 +8,102 @@ clock for tests. ``plan_elastic_mesh`` answers "a host died — what is the
 largest healthy mesh we can restart on?": model parallelism is fixed by the
 checkpoint layout, so only the data axis shrinks, and it shrinks to a power
 of two so collective rings stay balanced.
+
+Heartbeat transport is pluggable: ``HeartbeatMonitor(store=...)`` writes
+every beat (and dead-marks) through a :class:`KVStore` and merges the
+store's view before answering liveness queries, so monitors in *different
+processes* observe each other's workers. The default (``store=None``) stays
+the in-process dict — zero-dependency, single-process, the behavior every
+existing caller already has. :class:`FileKVStore` implements the protocol
+over a shared directory with fsync'd atomic per-key files (tmp + rename),
+which is what a multi-process fleet on a shared filesystem uses; an
+etcd/GCS-backed store only needs the same three methods. Cross-host beat
+timestamps come from each beating process's clock — production fleets want
+NTP-synced hosts (same caveat as any lease-based liveness protocol).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+import urllib.parse
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+
+class KVStore(Protocol):
+    """Minimal key-value surface the heartbeat transport needs."""
+
+    def put(self, key: str, value: str) -> None: ...
+
+    def get(self, key: str) -> Optional[str]: ...
+
+    def items(self, prefix: str = "") -> Dict[str, str]: ...
+
+
+class DictKVStore:
+    """In-process reference implementation (tests / single process)."""
+
+    def __init__(self):
+        self._d: Dict[str, str] = {}
+
+    def put(self, key: str, value: str) -> None:
+        self._d[key] = value
+
+    def get(self, key: str) -> Optional[str]:
+        return self._d.get(key)
+
+    def items(self, prefix: str = "") -> Dict[str, str]:
+        return {k: v for k, v in self._d.items() if k.startswith(prefix)}
+
+
+class FileKVStore:
+    """KVStore over a shared directory: one fsync'd file per key.
+
+    Writes go to a tempfile in the same directory, are fsync'd, then
+    ``os.replace``d into place — a reader never observes a torn value, only
+    the old or the new one (same discipline as the checkpoint MANIFEST).
+    Keys are percent-encoded into filenames so any string key works.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, urllib.parse.quote(key, safe=""))
+
+    def put(self, key: str, value: str) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".tmp.")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(value)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._path(key))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get(self, key: str) -> Optional[str]:
+        try:
+            with open(self._path(key)) as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
+
+    def items(self, prefix: str = "") -> Dict[str, str]:
+        out: Dict[str, str] = {}
+        for name in os.listdir(self.root):
+            if name.startswith(".tmp."):
+                continue
+            key = urllib.parse.unquote(name)
+            if key.startswith(prefix):
+                val = self.get(key)
+                if val is not None:
+                    out[key] = val
+        return out
 
 
 class WorkerLost(RuntimeError):
@@ -33,11 +123,19 @@ class WorkerLost(RuntimeError):
 class HeartbeatMonitor:
     def __init__(self, num_workers: int, timeout_s: float = 60.0,
                  straggler_factor: float = 2.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Optional[Callable[[], float]] = None,
+                 store: Optional[KVStore] = None):
         self.num_workers = num_workers
         self.timeout_s = timeout_s
         self.straggler_factor = straggler_factor
+        # beats written through a store are compared across processes/hosts,
+        # which needs a shared epoch: wall clock (NTP-synced). Monotonic
+        # clocks are boot-relative and incomparable between hosts — only
+        # safe single-process, where they remain the default.
+        if clock is None:
+            clock = time.time if store is not None else time.monotonic
         self.clock = clock
+        self.store = store
         self._start = clock()
         self._last_beat: Dict[int, float] = {}
         self._last_step: Dict[int, int] = {}
@@ -51,6 +149,37 @@ class HeartbeatMonitor:
         self._last_step[worker] = step
         self._dur_sum[worker] = self._dur_sum.get(worker, 0.0) + duration_s
         self._dur_n[worker] = self._dur_n.get(worker, 0) + 1
+        if self.store is not None:
+            # the beating process owns this worker's accumulated history, so
+            # the record is a full replacement, not a delta
+            self.store.put(f"hb/{worker}", json.dumps(
+                {"t": now, "step": step, "dur_sum": self._dur_sum[worker],
+                 "dur_n": self._dur_n[worker]}))
+
+    def _merge_store(self):
+        """Fold other processes' beats/dead-marks into the local view.
+
+        A stored record wins when its beat is newer than the local one —
+        the local monitor may itself be the writer, in which case the merge
+        is a no-op."""
+        if self.store is None:
+            return
+        for key, val in self.store.items("hb/").items():
+            try:
+                w = int(key.split("/", 1)[1])
+                rec = json.loads(val)
+            except (ValueError, json.JSONDecodeError):
+                continue
+            if rec["t"] >= self._last_beat.get(w, float("-inf")):
+                self._last_beat[w] = rec["t"]
+                self._last_step[w] = rec["step"]
+                self._dur_sum[w] = rec["dur_sum"]
+                self._dur_n[w] = rec["dur_n"]
+        for key in self.store.items("dead/"):
+            try:
+                self._marked_dead.add(int(key.split("/", 1)[1]))
+            except ValueError:
+                continue
 
     def _mean_durations(self, dead) -> Dict[int, float]:
         return {w: self._dur_sum[w] / self._dur_n[w]
@@ -62,6 +191,7 @@ class HeartbeatMonitor:
         Dead workers (marked or timed out) are excluded from both the
         candidates and the median, so their stale history cannot anchor it.
         """
+        # dead_workers() merges the store first, so means see fresh beats
         means = self._mean_durations(set(self.dead_workers()))
         if len(means) < 2:
             return []
@@ -79,6 +209,7 @@ class HeartbeatMonitor:
         A worker that has never beaten counts its silence from monitor
         creation, so a freshly started fleet is not declared dead at t=0.
         """
+        self._merge_store()
         now = self.clock()
         out = set(self._marked_dead)
         for w in range(self.num_workers):
@@ -89,8 +220,11 @@ class HeartbeatMonitor:
 
     def mark_dead(self, worker: int):
         self._marked_dead.add(worker)
+        if self.store is not None:
+            self.store.put(f"dead/{worker}", "1")
 
     def alive_count(self) -> int:
+        self._merge_store()
         return self.num_workers - len(self._marked_dead)
 
 

@@ -7,8 +7,15 @@ static-batch engine for A/B comparison. CPU-scale with --reduced; the
 identical round body shards over the production mesh (slots on 'data') via
 the same drift closure under ``use_sharding``.
 
+``--policy {fifo,edf,edf-preempt}`` selects the SLA admission policy
+(``repro.serve.sched``); ``--deadline-rounds`` attaches a deadline (lockstep
+rounds from submission) to every request so the deadline-miss rate is
+exercised; ``--device-rounds R`` amortizes the per-round host sync over up
+to R rounds on device while the grid is busy.
+
   PYTHONPATH=src python -m repro.launch.serve --arch chords-dit-xl --reduced \
-      --requests 8 --steps 50 --cores 8 --slots 4
+      --requests 8 --steps 50 --cores 8 --slots 4 \
+      --policy edf-preempt --deadline-rounds 60 --device-rounds 8
 """
 from __future__ import annotations
 
@@ -36,6 +43,15 @@ def main():
     ap.add_argument("--rtol", type=float, default=0.05)
     ap.add_argument("--static", action="store_true",
                     help="serve with the static-batch engine instead")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "edf", "edf-preempt"],
+                    help="SLA admission policy (repro.serve.sched)")
+    ap.add_argument("--deadline-rounds", type=int, default=None,
+                    help="per-request deadline in lockstep rounds from "
+                         "submission (default: no deadline)")
+    ap.add_argument("--device-rounds", type=int, default=1,
+                    help="max lockstep rounds per device program before a "
+                         "host sync (amortizes the done-flag readback)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -67,10 +83,12 @@ def main():
     engine = ContinuousEngine(
         drift=drift, latent_shape=(1, args.seq, args.latent_dim),
         n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
-        num_slots=args.slots, rtol=args.rtol)
+        num_slots=args.slots, rtol=args.rtol, policy=args.policy)
     for i in range(args.requests):
-        engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i)))
-    done = engine.run_until_drained()
+        engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i),
+                              deadline_rounds=args.deadline_rounds))
+    done = engine.run_until_drained(
+        max_rounds_on_device=args.device_rounds)
     for rid, out in done:
         print(f"[serve] request {rid:>3}: core {out.accepted_core} after "
               f"{out.rounds_used}/{args.steps} rounds ({out.speedup:.2f}x, "
@@ -81,6 +99,12 @@ def main():
           f"occupancy {st['occupancy']:.2f}, latency p50/p95 "
           f"{st['latency_rounds_p50']:.0f}/{st['latency_rounds_p95']:.0f}, "
           f"mean speedup {st['mean_speedup']:.2f}x")
+    print(f"[serve] policy={st['policy']}: deadline misses "
+          f"{st['deadline_misses']}/{st['deadline_total']} "
+          f"(rate {st['deadline_miss_rate']:.2f}), "
+          f"{st['preemptions']} preemptions "
+          f"({st['preempted_rounds_wasted']} rounds wasted), "
+          f"{st['host_syncs']} host syncs for {st['rounds_total']} rounds")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,6 @@
 from repro.serve.engine import (ChordsEngine, ContinuousEngine, Request,  # noqa: F401
                                 SampleOut, SlotState, StreamingSampler)
+from repro.serve.sched import (AdmissionQueue, CostModel, EdfPolicy,  # noqa: F401
+                               EdfPreemptPolicy, FifoPolicy, POLICIES,
+                               Policy, get_policy)
 from repro.serve.steps import greedy_generate, make_decode_step, make_prefill  # noqa: F401

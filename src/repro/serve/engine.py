@@ -16,12 +16,18 @@ accept state (rtol, init sequence from request priority, round counter) rides
 the jitted :class:`SlotState`. Requests therefore never queue behind a
 straggler in another lane. See ``src/repro/serve/README.md`` for the slot
 lifecycle and S×K sizing guidance.
+
+Admission ordering, deadline handling, and preemption live in the
+``repro.serve.sched`` policy layer (FIFO remains the default); the
+multi-round device loop (``step(max_rounds_on_device=R)``) amortizes the
+per-round done-flag readback when the grid is busy.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +38,10 @@ from repro.core.chords import (ChordsCarry, accept_test, bmask,
                                chords_init_carry, make_round_body,
                                make_slot_round_body, reset_slots,
                                slot_init_carry)
-from repro.core.init_sequence import default_speedup, make_sequence
+from repro.core.init_sequence import make_sequence
+from repro.serve.sched.cost import CostModel
+from repro.serve.sched.policy import Decision, EngineView, LaneView, get_policy
+from repro.serve.sched.queue import AdmissionQueue, QueueItem
 
 
 @dataclasses.dataclass
@@ -143,6 +152,9 @@ class Request:
     cond: Optional[object] = None
     priority: int = 0  # higher = more aggressive init sequence (earlier exit)
     rtol: Optional[float] = None  # per-request accept tolerance
+    deadline_rounds: Optional[int] = None  # SLA: finish within this many
+    # lockstep rounds of submission (None = best-effort, never counted as a
+    # miss); scheduling policies order/admit/preempt against it
 
 
 class ChordsEngine:
@@ -217,14 +229,24 @@ class SlotState(NamedTuple):
 class ContinuousEngine:
     """Continuous-batching CHORDS runtime over a fixed [S, K, ...] slot grid.
 
-    Every ``step()``: (1) admit queued requests into free slots (masked
-    ``reset_slots`` — no retrace, in-flight lanes untouched), (2) run ONE
-    lockstep round for all live slots inside a single jitted call (per-slot
-    round counters, per-slot rtol accept against the previous streamed
-    arrival, per-slot init sequence from request priority), (3) drain slots
-    whose accept fired. A request's output is identical whether its slot is
-    fresh or recycled, and a slot running K==1 degenerates to the sequential
-    solver (tested invariants).
+    Every ``step()``: (1) ask the scheduling ``policy`` which queued requests
+    to admit into which slots — and, for a preemptive policy, which in-flight
+    lanes to evict first — then apply the decision with the masked
+    ``reset_slots`` program (no retrace, untouched lanes bit-identical);
+    (2) run the lockstep round for all live slots inside a single jitted
+    call — or, with ``step(max_rounds_on_device=R)``, up to R rounds inside
+    one ``lax.while_loop`` that returns early the moment any slot's accept
+    fires, so a busy grid pays ONE host sync per R rounds instead of one per
+    round (the ``host_syncs`` counter tracks exactly these done-flag
+    readbacks); (3) drain slots whose accept fired. A request's output is
+    identical whether its slot is fresh or recycled, and a slot running K==1
+    degenerates to the sequential solver (tested invariants).
+
+    ``policy`` is ``'fifo'`` (default, the original submission-order
+    behavior), ``'edf'``, ``'edf-preempt'``, or any
+    ``repro.serve.sched.Policy`` instance. Deadlines (``Request.
+    deadline_rounds``) are relative to submission, in lockstep-round units;
+    ``stats()`` reports the miss rate over requests that declared one.
 
     ``num_cores`` is K for every slot; ``num_slots`` is S. On a mesh, size S
     to the 'data' axis (slots shard over it under ``use_sharding``) and K×
@@ -233,23 +255,35 @@ class ContinuousEngine:
 
     def __init__(self, drift: Callable, latent_shape: tuple, n_steps: int,
                  num_cores: int, tgrid, num_slots: int = 4, rtol: float = 0.05,
-                 priority_speedup: float = 1.25):
+                 priority_speedup: float = 1.25, policy=None,
+                 aging_rounds: int = 32):
         self.latent_shape = tuple(latent_shape)
         self.n = n_steps
         self.k = num_cores
         self.s = num_slots
         self.rtol = rtol
         self.priority_speedup = priority_speedup
-        self._i_seq_cache: Dict[int, list] = {}
+        self.policy = get_policy(policy)
+        self.cost = CostModel(num_cores, n_steps,
+                              priority_speedup=priority_speedup)
         self._slot_round = make_slot_round_body(drift, tgrid, n_steps, num_cores)
         self._round = jax.jit(self._round_fn)
+        self._multi = jax.jit(self._multi_round_fn)
         self._admit = jax.jit(self._admit_fn)
         self.state = self._init_state()
-        self.queue: List[Request] = []
-        self._slot_req: List[Optional[Request]] = [None] * num_slots
+        self.queue = AdmissionQueue(aging_rounds=aging_rounds)
+        self._slot_item: List[Optional[QueueItem]] = [None] * num_slots
+        self._slot_iseq: List[Optional[list]] = [None] * num_slots
+        self._slot_rtol = np.full((num_slots,), rtol, np.float32)  # host mirror
         self._admit_round: List[int] = [0] * num_slots
-        self._submit_round: Dict[int, int] = {}
         self.round_count = 0
+        self.host_syncs = 0  # done-flag readbacks (the per-round sync killed
+        # by the multi-round device loop)
+        self.preempted_rids: set = set()
+        self._preempt_count = 0
+        self._preempt_rounds_wasted = 0
+        self._deadline_total = 0
+        self._deadline_misses = 0
         self._live_sum = 0  # occupancy numerator
         self._latencies: List[int] = []
         self._served: List[Tuple[int, SampleOut]] = []
@@ -321,90 +355,171 @@ class ContinuousEngine:
             chosen=jnp.where(mask, 0, st.chosen),
         )
 
+    def _multi_round_fn(self, st: SlotState, done0, max_rounds):
+        """Up to ``max_rounds`` lockstep rounds in ONE device program.
+
+        The ``lax.while_loop`` exits as soon as any slot's accept fires
+        (``done`` rises relative to ``done0``, the flags at entry — drained
+        slots keep their stale flag until re-admission, so the delta is
+        exactly "newly finished") or the round budget elapses. The host only
+        reads back afterwards: one sync amortized over up to R rounds.
+        ``max_rounds`` is a traced scalar, so varying R never retraces.
+        """
+        def cond(c):
+            s, i = c
+            return (i < max_rounds) & jnp.any(s.live) \
+                & ~jnp.any(s.done & ~done0)
+
+        def body(c):
+            s, i = c
+            return self._round_fn(s), i + 1
+
+        return jax.lax.while_loop(cond, body,
+                                  (st, jnp.asarray(0, jnp.int32)))
+
     # -- host loop ------------------------------------------------------------
 
     def _i_seq_for(self, priority: int) -> list:
-        seq = self._i_seq_cache.get(priority)
-        if seq is None:
-            if priority <= 0:
-                seq = make_sequence(self.k, self.n)
-            else:
-                target = default_speedup(self.k, self.n) \
-                    * self.priority_speedup ** priority
-                seq = make_sequence(self.k, self.n, mode="theorem",
-                                    target_speedup=target)
-            self._i_seq_cache[priority] = seq
-        return seq
+        """Priority -> init sequence (the cost model's shared ladder)."""
+        return self.cost.seq_for_level(priority)
 
     @property
     def has_inflight(self) -> bool:
         """Any slot occupied (queued requests not included)."""
-        return any(r is not None for r in self._slot_req)
+        return any(it is not None for it in self._slot_item)
 
     def submit(self, req: Request):
-        self._submit_round[req.rid] = self.round_count
-        self.queue.append(req)
+        self.queue.submit(req, priority=req.priority,
+                          submit_round=self.round_count,
+                          deadline_rounds=req.deadline_rounds,
+                          rtol=self.rtol if req.rtol is None else req.rtol)
 
-    def step(self) -> list[tuple[int, SampleOut]]:
-        """Admit → one lockstep round → drain. Returns newly finished."""
-        free = [i for i, r in enumerate(self._slot_req) if r is None]
-        if self.queue and free:
-            admit = self.queue[: len(free)]
-            self.queue = self.queue[len(admit):]
-            mask = np.zeros(self.s, bool)
-            x0 = np.zeros((self.s,) + self.latent_shape, np.float32)
-            i_arr = np.zeros((self.s, self.k), np.int32)
-            rtol = np.asarray(jax.device_get(self.state.rtol)).copy()
-            for slot, req in zip(free, admit):
-                mask[slot] = True
-                x0[slot] = np.asarray(
-                    jax.random.normal(req.key, self.latent_shape))
-                i_arr[slot] = self._i_seq_for(req.priority)
-                rtol[slot] = self.rtol if req.rtol is None else req.rtol
-                self._slot_req[slot] = req
-                self._admit_round[slot] = self.round_count
-            self.state = self._admit(self.state, jnp.asarray(mask),
-                                     jnp.asarray(x0), jnp.asarray(i_arr),
-                                     jnp.asarray(rtol))
+    def _lane_views(self) -> list[LaneView]:
+        """Host-side in-flight snapshot — NO device sync: every live lane
+        advances exactly the engine's round delta, so progress is
+        ``round_count - admit_round``."""
+        lanes = []
+        for slot, item in enumerate(self._slot_item):
+            if item is None:
+                continue
+            done_r = self.round_count - self._admit_round[slot]
+            lanes.append(LaneView(
+                slot=slot, item=item, rounds_done=done_r,
+                est_remaining=self.cost.remaining_rounds(
+                    self._slot_iseq[slot], done_r, item.rtol)))
+        return lanes
+
+    def _apply_decision(self, dec: Decision):
+        adm_slots = {a.slot for a in dec.admissions}
+        assert all(s in adm_slots for s in dec.evictions), \
+            (dec.evictions, adm_slots)  # eviction exists only to admit
+        for slot in dec.evictions:
+            item = self._slot_item[slot]
+            ran = self.round_count - self._admit_round[slot]
+            item.rounds_credit += ran
+            item.preemptions += 1
+            self._preempt_count += 1
+            self._preempt_rounds_wasted += ran
+            self.preempted_rids.add(item.payload.rid)
+            self._slot_item[slot] = None
+            self.queue.push(item)  # submit round/deadline/credit preserved
+        if not dec.admissions:
+            return
+        mask = np.zeros(self.s, bool)
+        x0 = np.zeros((self.s,) + self.latent_shape, np.float32)
+        i_arr = np.zeros((self.s, self.k), np.int32)
+        for a in dec.admissions:
+            req = a.item.payload
+            mask[a.slot] = True
+            x0[a.slot] = np.asarray(
+                jax.random.normal(req.key, self.latent_shape))
+            i_arr[a.slot] = a.i_seq
+            self._slot_rtol[a.slot] = a.item.rtol
+            self._slot_item[a.slot] = a.item
+            self._slot_iseq[a.slot] = list(a.i_seq)
+            self._admit_round[a.slot] = self.round_count
+        self.state = self._admit(self.state, jnp.asarray(mask),
+                                 jnp.asarray(x0), jnp.asarray(i_arr),
+                                 jnp.asarray(self._slot_rtol))
+
+    def _amortizable(self) -> bool:
+        """May the host stay away for several rounds? Yes when nothing it
+        could do between rounds matters: the queue is empty, or every slot
+        is busy and the policy never preempts (then the next admission
+        opportunity IS the next accept, which exits the device loop)."""
+        if len(self.queue) == 0:
+            return True
+        if self.policy.preemptive:
+            return False  # preemption decisions are made between rounds
+        return not any(it is None for it in self._slot_item)
+
+    def step(self, max_rounds_on_device: int = 1
+             ) -> list[tuple[int, SampleOut]]:
+        """Policy decision → lockstep round(s) → drain. Returns finished."""
+        free = [i for i, it in enumerate(self._slot_item) if it is None]
+        if len(self.queue) and (free or self.policy.preemptive):
+            view = EngineView(now=self.round_count, queue=self.queue,
+                              free_slots=free, lanes=self._lane_views(),
+                              cost=self.cost)
+            self._apply_decision(self.policy.decide(view))
         if not self.has_inflight:
             return []
 
-        self._live_sum += sum(r is not None for r in self._slot_req)
-        self.state = self._round(self.state)
-        self.round_count += 1
+        live_ct = sum(it is not None for it in self._slot_item)
+        r_dev = max(1, int(max_rounds_on_device))
+        if r_dev > 1 and self._amortizable():
+            st, ran_dev = self._multi(self.state, self.state.done,
+                                      jnp.asarray(r_dev, jnp.int32))
+            self.state = st
+            ran, done, rounds_used, chosen = jax.device_get(
+                (ran_dev, st.done, st.rounds_used, st.chosen))
+            ran = int(ran)
+        else:
+            self.state = self._round(self.state)
+            done, rounds_used, chosen = jax.device_get(
+                (self.state.done, self.state.rounds_used, self.state.chosen))
+            ran = 1
+        self.host_syncs += 1
+        self.round_count += ran
+        self._live_sum += live_ct * ran
 
-        done = np.asarray(jax.device_get(self.state.done))
         out: list[tuple[int, SampleOut]] = []
         for slot in range(self.s):
-            req = self._slot_req[slot]
-            if req is None or not done[slot]:
+            item = self._slot_item[slot]
+            if item is None or not done[slot]:
                 continue
-            rounds_used = int(self.state.rounds_used[slot])
-            wait = self._admit_round[slot] - self._submit_round.pop(req.rid)
-            latency = wait + rounds_used
+            ru = int(rounds_used[slot])
+            # queue wait is measured from SUBMIT time — eviction/re-admission
+            # cycles and queue reordering all land in the same number
+            latency = self.round_count - item.submit_round
+            if math.isfinite(item.deadline_round):
+                self._deadline_total += 1
+                self._deadline_misses += int(
+                    self.round_count > item.deadline_round)
             res = SampleOut(
                 sample=jax.device_get(self.state.result[slot]),
-                rounds_used=rounds_used,
-                accepted_core=int(self.state.chosen[slot]),
-                speedup=self.n / max(1, rounds_used),
+                rounds_used=ru,
+                accepted_core=int(chosen[slot]),
+                speedup=self.n / max(1, ru),
                 latency_rounds=latency,
             )
             self._latencies.append(latency)
-            self._served.append((req.rid, res))
-            out.append((req.rid, res))
-            self._slot_req[slot] = None  # slot is free; done flag stays until
-            # the next admission clears it (the lane is frozen meanwhile)
+            self._served.append((item.payload.rid, res))
+            out.append((item.payload.rid, res))
+            self._slot_item[slot] = None  # slot is free; done flag stays
+            # until the next admission clears it (the lane is frozen)
         return out
 
-    def run_until_drained(self, max_rounds: Optional[int] = None
+    def run_until_drained(self, max_rounds: Optional[int] = None,
+                          max_rounds_on_device: int = 1
                           ) -> list[tuple[int, SampleOut]]:
         """Step until queue and grid are empty; returns all (rid, SampleOut)."""
         budget = max_rounds if max_rounds is not None else \
-            (len(self.queue) + self.s) * (self.n + 1)
+            2 * (len(self.queue) + self.s) * (self.n + 1)  # 2x: preemption
         limit = self.round_count + budget  # relative: engines are long-lived
         served: list[tuple[int, SampleOut]] = []
-        while self.queue or self.has_inflight:
-            served += self.step()
+        while len(self.queue) or self.has_inflight:
+            served += self.step(max_rounds_on_device=max_rounds_on_device)
             if self.round_count >= limit:
                 raise RuntimeError(
                     f"engine did not drain within {budget} rounds")
@@ -424,4 +539,12 @@ class ContinuousEngine:
             "latency_rounds_p95": float(np.percentile(lat, 95)) if served else 0.0,
             "mean_speedup": float(np.mean([o.speedup for _, o in self._served])
                                   ) if served else 0.0,
+            "policy": self.policy.name,
+            "host_syncs": self.host_syncs,
+            "deadline_total": self._deadline_total,
+            "deadline_misses": self._deadline_misses,
+            "deadline_miss_rate": self._deadline_misses / self._deadline_total
+            if self._deadline_total else 0.0,
+            "preemptions": self._preempt_count,
+            "preempted_rounds_wasted": self._preempt_rounds_wasted,
         }

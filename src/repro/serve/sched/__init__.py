@@ -1,0 +1,15 @@
+"""SLA-aware scheduling & admission control for the slot-grid serve engine.
+
+Policy layer between ``Request`` submission and slot-grid admission:
+``queue`` (EDF + priority classes + aging), ``cost`` (rounds-to-finish
+predictions over the CHORDS emit schedule), ``policy`` (FIFO / EDF /
+EDF-preempt decisions applied by ``repro.serve.engine.ContinuousEngine``),
+``workload`` (the staggered SLA demo trace shared by examples, benchmarks,
+CI, and tests). See ``src/repro/serve/sched/README.md``.
+"""
+from repro.serve.sched.cost import CostModel  # noqa: F401
+from repro.serve.sched.policy import (Admission, Decision, EdfPolicy,  # noqa: F401
+                                      EdfPreemptPolicy, EngineView,
+                                      FifoPolicy, LaneView, POLICIES, Policy,
+                                      get_policy)
+from repro.serve.sched.queue import AdmissionQueue, QueueItem  # noqa: F401

@@ -1,0 +1,126 @@
+"""Rounds-to-finish cost model over the CHORDS emit schedule.
+
+The whole point of SLA scheduling on a CHORDS grid is that per-request effort
+is a *knob*: a more aggressive init sequence makes the fastest core emit
+earlier (speedup ``N / (N - i_K + K - 1)``) at the price of accuracy margin.
+This module predicts, host-side and in closed form via
+``repro.core.scheduler.emit_rounds``, how many lockstep rounds a request will
+take under a given init sequence — so a policy can pick the *least*
+aggressive sequence that still meets the deadline instead of mapping
+priority -> i_seq by fixed table.
+
+Prediction semantics (documented knob, not an oracle):
+
+* The streaming accept test needs two consecutive emissions to agree, so the
+  earliest possible accept is the second arrival — core ``K-2``'s emit round.
+  ``accept_arrival`` (default 2) says which arrival we assume passes:
+  ``predict_rounds = emit_rounds[K - accept_arrival]`` (clamped to core 0).
+* ``rtol == 0`` disables early exit entirely (the engine force-accepts core
+  0's exact sequential solve at round N), so prediction is the worst case
+  ``emit_rounds[0] == N`` — deterministic, which is what the CI workload
+  uses to make miss counts reproducible.
+
+The ladder of candidate sequences is shared with the engine's priority
+table: level 0 is the paper preset/theorem default (``make_sequence(K, N)``),
+level ``p`` targets ``default_speedup * priority_speedup**p``. This keeps
+"policy chose level p" and "request asked for priority p" bit-identical
+code paths (the serve tests rely on it).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import scheduler
+from repro.core.init_sequence import default_speedup, make_sequence
+
+MAX_LADDER_LEVEL = 6
+
+
+class CostModel:
+    """Host-side round predictions for one engine's (K, N) grid."""
+
+    def __init__(self, num_cores: int, n_steps: int,
+                 priority_speedup: float = 1.25, accept_arrival: int = 2):
+        self.k = num_cores
+        self.n = n_steps
+        self.priority_speedup = priority_speedup
+        self.accept_arrival = accept_arrival
+        self._ladder: List[List[int]] = []
+
+    # -- init-sequence ladder --------------------------------------------------
+
+    def seq_for_level(self, level: int) -> List[int]:
+        """Ladder level -> init sequence (level == request priority).
+
+        Level 0 is ``make_sequence(K, N)``; level p targets
+        ``default_speedup * priority_speedup**p``. Falls back to the highest
+        constructible level when discretization can't fit the target."""
+        level = max(0, min(level, MAX_LADDER_LEVEL))
+        while len(self._ladder) <= level:
+            p = len(self._ladder)
+            if p == 0:
+                self._ladder.append(make_sequence(self.k, self.n))
+                continue
+            target = default_speedup(self.k, self.n) \
+                * self.priority_speedup ** p
+            try:
+                self._ladder.append(
+                    make_sequence(self.k, self.n, mode="theorem",
+                                  target_speedup=target))
+            except ValueError:
+                self._ladder.append(self._ladder[-1])
+        return list(self._ladder[level])
+
+    def ladder(self) -> List[List[int]]:
+        self.seq_for_level(MAX_LADDER_LEVEL)
+        return [list(s) for s in self._ladder]
+
+    # -- predictions -----------------------------------------------------------
+
+    def predict_rounds(self, i_seq: Sequence[int],
+                       rtol: Optional[float] = None) -> int:
+        """Lockstep rounds until this sequence's assumed accept fires."""
+        emit = scheduler.emit_rounds(list(i_seq), self.n)
+        if rtol is not None and rtol <= 0.0:
+            return int(emit[0])  # exact sequential fallback: worst case N
+        idx = max(0, len(i_seq) - self.accept_arrival)
+        return int(emit[idx])
+
+    def worst_case_rounds(self, i_seq: Sequence[int]) -> int:
+        """Core 0's emit round — always N (the sequential solve)."""
+        return int(scheduler.emit_rounds(list(i_seq), self.n)[0])
+
+    def remaining_rounds(self, i_seq: Sequence[int], rounds_done: int,
+                         rtol: Optional[float] = None) -> int:
+        """Predicted rounds left for an in-flight lane (>= 1: a live lane
+        that outran the prediction can accept on any upcoming emission)."""
+        return max(1, self.predict_rounds(i_seq, rtol) - rounds_done)
+
+    def wait_rounds(self, free_slots: int,
+                    inflight_remaining: Sequence[int]) -> float:
+        """Predicted rounds until a slot frees given current occupancy."""
+        if free_slots > 0:
+            return 0
+        if not inflight_remaining:
+            return math.inf  # no free slot and nothing draining: unservable
+        return min(inflight_remaining)
+
+    def pick_i_seq(self, budget_rounds: float,
+                   min_level: int = 0,
+                   rtol: Optional[float] = None
+                   ) -> Tuple[List[int], int, int]:
+        """Least aggressive ladder level whose prediction fits the budget.
+
+        Returns ``(i_seq, predicted_rounds, level)``. When even the top
+        level misses the budget the top level is returned anyway (the
+        request is admitted best-effort; the miss is the workload's fault,
+        and stats will say so)."""
+        chosen = None
+        for level in range(max(0, min_level), MAX_LADDER_LEVEL + 1):
+            seq = self.seq_for_level(level)
+            pred = self.predict_rounds(seq, rtol)
+            chosen = (seq, pred, level)
+            if pred <= budget_rounds:
+                break
+        return chosen

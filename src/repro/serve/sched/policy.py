@@ -1,0 +1,191 @@
+"""Scheduling policies: the decision layer between queue and slot grid.
+
+A policy sees a host-side :class:`EngineView` (queue, free slots, in-flight
+lane views, the cost model, the current round) and returns a
+:class:`Decision`: which queued items go into which slots with which init
+sequence, and which in-flight lanes to evict to make room. The engine
+applies the decision with the existing masked ``reset_slots`` admission
+program — policies never touch device state, so every guarantee of the slot
+grid (recycling invisibility, bit-identity of untouched lanes) holds under
+any policy by construction.
+
+* ``FifoPolicy`` — PR 3 behavior, the default: submission-order admission,
+  init sequence from the request's priority, never preempts.
+* ``EdfPolicy`` — pops the queue in (effective class, deadline, seq) order
+  and asks the cost model for the cheapest init sequence that still meets
+  the item's remaining deadline budget (floored at the request's priority
+  level so no-deadline requests behave exactly like FIFO's).
+* ``EdfPreemptPolicy`` — EDF, plus: when the queue head would miss its
+  deadline waiting for a natural drain but would meet it if admitted now,
+  evict the lowest-value in-flight lane (max slack, then least progress;
+  lanes already evicted ``max_preemptions`` times are immune, which bounds
+  thrash and guarantees every request eventually runs to completion). The
+  evicted request re-enters the queue with its executed rounds credited
+  (``QueueItem.rounds_credit`` — pre-aged, so it is promoted, not punished).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.serve.sched.cost import CostModel
+from repro.serve.sched.queue import AdmissionQueue, QueueItem
+
+
+@dataclasses.dataclass
+class LaneView:
+    """Host-side snapshot of one occupied slot (no device sync needed:
+    every live lane advances exactly one lockstep round per engine round)."""
+
+    slot: int
+    item: QueueItem
+    rounds_done: int
+    est_remaining: int
+
+    def slack(self, now: int) -> float:
+        return self.item.deadline_round - now - self.est_remaining
+
+
+@dataclasses.dataclass
+class EngineView:
+    now: int
+    queue: AdmissionQueue
+    free_slots: List[int]
+    lanes: List[LaneView]
+    cost: CostModel
+
+
+@dataclasses.dataclass
+class Admission:
+    slot: int
+    item: QueueItem
+    i_seq: List[int]
+    predicted_rounds: int
+    level: int
+
+
+@dataclasses.dataclass
+class Decision:
+    admissions: List[Admission] = dataclasses.field(default_factory=list)
+    evictions: List[int] = dataclasses.field(default_factory=list)
+    # invariant (engine-asserted): every evicted slot is re-filled by one of
+    # ``admissions`` in the same decision — eviction exists only to admit.
+
+
+class Policy:
+    """Base policy == FIFO (the PR 3 default)."""
+
+    name = "fifo"
+    preemptive = False
+
+    def _admission(self, view: EngineView, slot: int, item: QueueItem
+                   ) -> Admission:
+        seq = view.cost.seq_for_level(item.priority)
+        return Admission(slot=slot, item=item, i_seq=seq,
+                         predicted_rounds=view.cost.predict_rounds(
+                             seq, item.rtol),
+                         level=max(0, item.priority))
+
+    def _pop(self, view: EngineView) -> Optional[QueueItem]:
+        return view.queue.pop_fifo()
+
+    def decide(self, view: EngineView) -> Decision:
+        dec = Decision()
+        for slot in view.free_slots:
+            item = self._pop(view)
+            if item is None:
+                break
+            dec.admissions.append(self._admission(view, slot, item))
+        return dec
+
+
+class FifoPolicy(Policy):
+    pass
+
+
+class EdfPolicy(Policy):
+    name = "edf"
+
+    def _pop(self, view: EngineView) -> Optional[QueueItem]:
+        return view.queue.pop(view.now)
+
+    def _admission(self, view: EngineView, slot: int, item: QueueItem
+                   ) -> Admission:
+        budget = item.deadline_round - view.now
+        seq, pred, level = view.cost.pick_i_seq(
+            budget, min_level=max(0, item.priority), rtol=item.rtol)
+        return Admission(slot=slot, item=item, i_seq=seq,
+                         predicted_rounds=pred, level=level)
+
+
+class EdfPreemptPolicy(EdfPolicy):
+    name = "edf-preempt"
+    preemptive = True
+
+    def __init__(self, max_preemptions: int = 1):
+        self.max_preemptions = max_preemptions
+
+    def _pick_victim(self, view: EngineView, head_slack: float,
+                     taken: Sequence[int]) -> Optional[LaneView]:
+        """Lowest-value lane: maximum slack (no deadline == inf slack goes
+        first), then least progress (least sunk compute). A victim must have
+        strictly more slack than the head gains — never trade one miss for
+        another — and must not have exhausted its preemption budget."""
+        candidates = [
+            ln for ln in view.lanes
+            if ln.slot not in taken
+            and ln.item.preemptions < self.max_preemptions
+            and ln.slack(view.now) > max(head_slack, 0)
+        ]
+        if not candidates:
+            return None
+        return max(candidates,
+                   key=lambda ln: (ln.slack(view.now), -ln.rounds_done))
+
+    def decide(self, view: EngineView) -> Decision:
+        dec = super().decide(view)  # EDF admissions into naturally free slots
+        taken = [a.slot for a in dec.admissions]
+        remaining = [ln.est_remaining for ln in view.lanes
+                     if ln.slot not in taken]
+        while len(view.queue):
+            head = view.queue.peek(view.now)
+            budget = head.deadline_round - view.now
+            if math.isinf(budget):
+                break  # head (and thus everything behind it) can wait
+            seq, need, level = view.cost.pick_i_seq(
+                budget, min_level=max(0, head.priority), rtol=head.rtol)
+            wait = view.cost.wait_rounds(0, remaining)
+            if need > budget:
+                break   # hopeless even if admitted now: don't waste a lane
+            if need + wait <= budget:
+                break   # meets its deadline by waiting: no eviction needed
+            victim = self._pick_victim(view, head_slack=budget - need,
+                                       taken=taken)
+            if victim is None:
+                break
+            view.queue.pop(view.now)  # == head
+            dec.evictions.append(victim.slot)
+            dec.admissions.append(Admission(
+                slot=victim.slot, item=head, i_seq=seq,
+                predicted_rounds=need, level=level))
+            taken.append(victim.slot)
+            remaining = [ln.est_remaining for ln in view.lanes
+                         if ln.slot not in taken]
+        return dec
+
+
+POLICIES = {p.name: p for p in (FifoPolicy, EdfPolicy, EdfPreemptPolicy)}
+
+
+def get_policy(name_or_policy) -> Policy:
+    """'fifo' | 'edf' | 'edf-preempt' | a Policy instance (passed through)."""
+    if isinstance(name_or_policy, Policy):
+        return name_or_policy
+    if name_or_policy is None:
+        return FifoPolicy()
+    try:
+        return POLICIES[name_or_policy]()
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name_or_policy!r}; known: {sorted(POLICIES)}")

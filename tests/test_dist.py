@@ -9,7 +9,8 @@ import numpy as np
 import pytest
 
 from repro.dist.checkpoint import CheckpointManager
-from repro.dist.fault_tolerance import HeartbeatMonitor, plan_elastic_mesh
+from repro.dist.fault_tolerance import (DictKVStore, FileKVStore,
+                                        HeartbeatMonitor, plan_elastic_mesh)
 from repro.dist.sharding import SERVE_RULES, TRAIN_RULES, ShardingCtx
 
 
@@ -68,6 +69,59 @@ def test_heartbeat_dead_and_straggler():
     assert set(mon.dead_workers()) == {0, 1, 2, 3}
     mon.mark_dead(3)
     assert mon.alive_count() == 3
+
+
+def test_heartbeat_over_file_kvstore_cross_monitor():
+    """Two monitors in (what would be) different processes share liveness
+    through a FileKVStore: beats written by one are visible to the other's
+    straggler/dead queries, and dead-marks propagate."""
+    t = [0.0]
+    with tempfile.TemporaryDirectory() as d:
+        store_a, store_b = FileKVStore(d), FileKVStore(d)  # same shared dir
+        mon_a = HeartbeatMonitor(4, timeout_s=10, clock=lambda: t[0],
+                                 store=store_a)
+        mon_b = HeartbeatMonitor(4, timeout_s=10, clock=lambda: t[0],
+                                 store=store_b)
+        for step in range(10):  # workers 0,1 beat via A; 2,3 via B
+            for w in (0, 1):
+                mon_a.beat(w, step, 1.0)
+            for w in (2, 3):
+                mon_b.beat(w, step, 3.5 if w == 3 else 1.0)
+        t[0] = 5.0
+        assert mon_a.stragglers() == [3]  # w3's history arrived via the store
+        assert mon_b.dead_workers() == []
+        t[0] = 20.0
+        for w in (0, 1, 2):
+            mon_a.beat(w, 11, 1.0)
+        assert mon_b.dead_workers() == [3]  # w3 silent; others beat through A
+        mon_a.mark_dead(3)
+        assert 3 in mon_b.dead_workers() and mon_b.alive_count() == 3
+
+
+def test_file_kvstore_roundtrip_and_atomicity():
+    with tempfile.TemporaryDirectory() as d:
+        kv = FileKVStore(d)
+        kv.put("hb/0", "a")
+        kv.put("hb/0", "b")  # overwrite via tmp+rename
+        kv.put("dead/1", "1")
+        kv.put("weird/key with spaces", "v")
+        assert kv.get("hb/0") == "b" and kv.get("nope") is None
+        assert kv.items("hb/") == {"hb/0": "b"}
+        assert kv.items("weird/") == {"weird/key with spaces": "v"}
+        # no tmp droppings left behind, every file is a complete value
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp.")]
+
+
+def test_heartbeat_dict_store_matches_default_semantics():
+    """store=DictKVStore behaves exactly like the in-process default."""
+    t = [0.0]
+    mon = HeartbeatMonitor(2, timeout_s=10, clock=lambda: t[0],
+                           store=DictKVStore())
+    mon.beat(0, 0, 1.0)
+    t[0] = 5.0
+    assert mon.dead_workers() == []
+    t[0] = 100.0
+    assert mon.dead_workers() == [0, 1]
 
 
 def test_elastic_mesh_plan():

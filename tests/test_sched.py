@@ -1,0 +1,201 @@
+"""Property tests for the scheduling subsystem's pure-Python layer.
+
+The admission queue is the reference semantics: lexicographic
+(effective class desc, absolute deadline asc, submission seq asc) at pop
+time. Runs under real hypothesis in CI and under the deterministic
+``repro.utils.hypothesis_fallback`` shim otherwise (see conftest.py).
+"""
+import math
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import scheduler
+from repro.core.init_sequence import make_sequence
+from repro.serve.sched import (AdmissionQueue, CostModel, EdfPreemptPolicy,
+                               EngineView, LaneView)
+
+
+def _fill(q, specs, submit_round=0):
+    """specs: [(priority, deadline_rounds_or_None), ...] submitted in order."""
+    return [q.submit(payload=i, priority=p, submit_round=submit_round,
+                     deadline_rounds=d) for i, (p, d) in enumerate(specs)]
+
+
+# --- admission queue ---------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=12),
+       st.integers(min_value=0, max_value=10_000))
+def test_edf_never_inverts_deadlines_within_class(n_items, seed):
+    """Same priority class, same age: pop order is exactly EDF."""
+    rng = np.random.default_rng(seed)
+    q = AdmissionQueue(aging_rounds=64)
+    deadlines = [int(d) for d in rng.integers(1, 500, size=n_items)]
+    _fill(q, [(1, d) for d in deadlines])
+    popped = [q.pop(now=0).deadline_round for _ in range(n_items)]
+    assert popped == sorted(popped)  # no deadline inversion, ties by seq
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=15),
+       st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=0, max_value=200))
+def test_pop_order_matches_lexicographic_reference(n_items, seed, now):
+    """pop() drains in exactly the order ``ordered(now)`` promises: effective
+    class desc, deadline asc, submission seq asc."""
+    rng = np.random.default_rng(seed)
+    q = AdmissionQueue(aging_rounds=8)
+    for i in range(n_items):
+        q.submit(payload=i, priority=int(rng.integers(0, 4)),
+                 submit_round=int(rng.integers(0, max(1, now + 1))),
+                 deadline_rounds=None if rng.random() < 0.3
+                 else int(rng.integers(1, 300)))
+    ref = [it.seq for it in q.ordered(now)]
+    got = [q.pop(now).seq for _ in range(n_items)]
+    assert got == ref and len(q) == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=4),
+       st.integers(min_value=2, max_value=16))
+def test_aging_bounds_starvation(prio, aging):
+    """A class-0 item against an endless stream of class-``prio`` arrivals
+    (one per round, one pop per round): aging promotes the old item past
+    every arrival more than ~``aging * prio`` rounds younger, so it pops
+    within a bound — it is never starved."""
+    q = AdmissionQueue(aging_rounds=aging)
+    victim = q.submit(payload="victim", priority=0, submit_round=0,
+                      deadline_rounds=None)
+    bound = aging * (prio + 2) + 2  # promotion horizon + in-window backlog
+    for now in range(10 * bound):
+        q.submit(payload=f"hi{now}", priority=prio, submit_round=now,
+                 deadline_rounds=10)
+        if q.pop(now) is victim:
+            assert now <= bound, (now, bound)
+            return
+    raise AssertionError("victim starved")
+
+
+def test_fifo_pop_ignores_priority_and_deadline():
+    q = AdmissionQueue()
+    _fill(q, [(0, None), (5, 3), (2, 1)])
+    assert [q.pop_fifo().payload for _ in range(3)] == [0, 1, 2]
+
+
+def test_preemption_credit_pre_ages():
+    """Evicted rounds count as already-waited rounds: credit promotes."""
+    q = AdmissionQueue(aging_rounds=10)
+    a = q.submit(payload="a", priority=0, submit_round=0)
+    b = q.submit(payload="b", priority=0, submit_round=0)
+    b.rounds_credit = 25  # ran 25 rounds before eviction
+    assert q.effective_class(b, now=0) == 2 > q.effective_class(a, now=0)
+    assert q.pop(now=0) is b
+
+
+# --- cost model --------------------------------------------------------------
+
+def test_cost_model_predicts_from_emit_rounds():
+    cm = CostModel(num_cores=4, n_steps=50)
+    seq = cm.seq_for_level(0)
+    assert seq == make_sequence(4, 50)
+    emit = scheduler.emit_rounds(seq, 50)
+    # earliest plausible accept: the SECOND streamed arrival (core K-2)
+    assert cm.predict_rounds(seq) == emit[2]
+    # rtol=0 disables early exit -> worst case, core 0's round N emission
+    assert cm.predict_rounds(seq, rtol=0.0) == emit[0] == 50
+    assert cm.worst_case_rounds(seq) == 50
+    assert cm.remaining_rounds(seq, rounds_done=10) == emit[2] - 10
+    assert cm.remaining_rounds(seq, rounds_done=10_000) == 1  # clipped
+
+
+def test_cost_model_picks_cheapest_sequence_meeting_budget():
+    cm = CostModel(num_cores=4, n_steps=50)
+    # unlimited budget -> level 0 (most accurate)
+    seq, pred, level = cm.pick_i_seq(math.inf)
+    assert level == 0 and seq == cm.seq_for_level(0)
+    # tightening the budget escalates monotonically, and the choice meets
+    # the budget whenever ANY ladder level can
+    prev_level = 0
+    for budget in range(cm.predict_rounds(cm.seq_for_level(0)), 0, -1):
+        _, pred, level = cm.pick_i_seq(budget)
+        assert level >= prev_level
+        feasible = any(cm.predict_rounds(cm.seq_for_level(v)) <= budget
+                       for v in range(7))
+        if feasible:
+            assert pred <= budget, (budget, pred, level)
+        prev_level = level
+    # min_level floors the ladder (priority requests never de-escalate)
+    _, _, level = cm.pick_i_seq(math.inf, min_level=2)
+    assert level == 2
+
+
+def test_cost_model_wait_estimate():
+    cm = CostModel(num_cores=4, n_steps=50)
+    assert cm.wait_rounds(free_slots=1, inflight_remaining=[9, 3]) == 0
+    assert cm.wait_rounds(free_slots=0, inflight_remaining=[9, 3]) == 3
+    assert math.isinf(cm.wait_rounds(free_slots=0, inflight_remaining=[]))
+
+
+# --- preemption policy (pure decision layer) ---------------------------------
+
+def _view(now, queue, lanes, k=4, n=50):
+    return EngineView(now=now, queue=queue, free_slots=[],
+                      lanes=lanes, cost=CostModel(k, n))
+
+
+def _lane(slot, item, rounds_done, est_remaining):
+    return LaneView(slot=slot, item=item, rounds_done=rounds_done,
+                    est_remaining=est_remaining)
+
+
+def test_preempt_evicts_max_slack_least_progress():
+    q = AdmissionQueue()
+    cm = CostModel(4, 50)
+    need = cm.predict_rounds(cm.seq_for_level(0))
+    urgent = q.submit(payload="u", priority=0, submit_round=0,
+                      deadline_rounds=need + 2)  # meetable only if admitted now
+    idle = AdmissionQueue()
+    bulk_a = idle.submit(payload="a", priority=0, submit_round=0)  # no deadline
+    bulk_b = idle.submit(payload="b", priority=0, submit_round=0)
+    lanes = [_lane(0, bulk_a, rounds_done=30, est_remaining=20),
+             _lane(1, bulk_b, rounds_done=5, est_remaining=45)]
+    dec = EdfPreemptPolicy().decide(_view(0, q, lanes))
+    assert dec.evictions == [1]  # equal (inf) slack -> least progress
+    assert len(dec.admissions) == 1 and dec.admissions[0].slot == 1
+    assert dec.admissions[0].item is urgent
+    assert len(q) == 0
+
+
+def test_preempt_declines_when_waiting_suffices_or_hopeless():
+    cm = CostModel(4, 50)
+    need = cm.predict_rounds(cm.seq_for_level(0))
+    idle = AdmissionQueue()
+    bulk = idle.submit(payload="a", priority=0, submit_round=0)
+    lanes = [_lane(0, bulk, rounds_done=48, est_remaining=2)]
+
+    q1 = AdmissionQueue()  # deadline loose enough to survive the 2-round wait
+    q1.submit(payload="u", priority=0, submit_round=0,
+              deadline_rounds=need + 10)
+    assert EdfPreemptPolicy().decide(_view(0, q1, lanes)).evictions == []
+
+    q2 = AdmissionQueue()  # hopeless even if admitted this instant
+    fastest = cm.pick_i_seq(1)[1]
+    q2.submit(payload="u", priority=0, submit_round=0,
+              deadline_rounds=max(1, fastest - 1))
+    assert EdfPreemptPolicy().decide(_view(0, q2, lanes)).evictions == []
+
+
+def test_preempt_respects_max_preemptions_immunity():
+    q = AdmissionQueue()
+    cm = CostModel(4, 50)
+    need = cm.predict_rounds(cm.seq_for_level(0))
+    q.submit(payload="u", priority=0, submit_round=0, deadline_rounds=need + 2)
+    idle = AdmissionQueue()
+    bulk = idle.submit(payload="a", priority=0, submit_round=0)
+    bulk.preemptions = 1  # already evicted once: immune at default budget
+    lanes = [_lane(0, bulk, rounds_done=1, est_remaining=49)]
+    assert EdfPreemptPolicy().decide(_view(0, q, lanes)).evictions == []
+    assert EdfPreemptPolicy(max_preemptions=2).decide(
+        _view(0, q, lanes)).evictions == [0]
