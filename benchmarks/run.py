@@ -12,6 +12,15 @@ engine, and (2) on the SLA demo trace every scheduling policy drains with
 ``edf-preempt`` meeting strictly more deadlines than ``fifo`` while
 non-preempted outputs stay bitwise identical across policies. Per-policy
 stats land in results/serve_smoke.json (uploaded as a CI artifact).
+
+``--serve-burst`` replays the bursty burst→lull→burst arrival trace
+(``repro.serve.sched.workload.bursty_trace``) through three engines —
+demand-paged elastic, fixed ``S = max_slots``, fixed ``S = min_slots`` —
+and asserts the elastic-capacity contract: strictly fewer wasted
+slot-rounds than fixed-max, p95 latency no worse than fixed-min, total
+retraces bounded by the number of distinct capacity buckets visited, and
+every non-migration-affected request's output bitwise identical to the
+fixed-S run. Stats land in results/serve_burst.json (CI artifact).
 """
 from __future__ import annotations
 
@@ -103,10 +112,84 @@ def serve_smoke() -> dict:
     return out
 
 
+def serve_burst() -> dict:
+    """Elastic vs fixed-S capacity on the bursty trace (CI tier-1)."""
+    import json
+    import os
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import RESULTS_DIR
+    from repro.core import uniform_tgrid
+    from repro.serve import ContinuousEngine
+    from repro.serve.sched.workload import bursty_trace, drive
+
+    n, k = 16, 4
+    min_s, max_s = 2, 8
+    tg = uniform_tgrid(n, 0.98)
+    lam = jnp.linspace(0.1, 1.5, 4)
+
+    def drift(x, t):
+        return -x * lam
+
+    def run(label, **kw):
+        t0 = time.perf_counter()
+        eng = ContinuousEngine(drift, latent_shape=(4,), n_steps=n,
+                               num_cores=k, tgrid=tg, rtol=0.0, **kw)
+        reqs, arrivals = bursty_trace(n)
+        out = drive(eng, reqs, arrivals)
+        st = eng.stats()
+        st["wall_s"] = time.perf_counter() - t0
+        print(f"serve_burst[{label}],slots={st['num_slots']},"
+              f"wasted={st['wasted_slot_rounds']},retraces={st['retraces']},"
+              f"p95={st['latency_rounds_p95']:.0f},resizes={st['resizes']},"
+              f"buckets={st['buckets_visited']}")
+        return eng, out, st
+
+    elastic, e_out, e_st = run("elastic", min_slots=min_s, max_slots=max_s,
+                               resize_hysteresis=8)
+    _, fmax_out, fmax_st = run("fixed-max", num_slots=max_s)
+    _, fmin_out, fmin_st = run("fixed-min", num_slots=min_s)
+
+    # the elastic-capacity contract (ISSUE 5 acceptance):
+    assert e_st["wasted_slot_rounds"] < fmax_st["wasted_slot_rounds"], \
+        (e_st["wasted_slot_rounds"], fmax_st["wasted_slot_rounds"])
+    assert e_st["latency_rounds_p95"] <= fmin_st["latency_rounds_p95"], \
+        (e_st["latency_rounds_p95"], fmin_st["latency_rounds_p95"])
+    assert e_st["retraces"] <= len(e_st["buckets_visited"]), e_st
+    # capacity changes scheduling, never results: every request the resize
+    # did not migrate is BITWISE the fixed-S output (migrated lanes are too
+    # — the gather is bit-exact — but only the former is the contract)
+    for rid, o in e_out.items():
+        if rid in elastic.migrated_rids:
+            continue
+        assert np.array_equal(np.asarray(o.sample),
+                              np.asarray(fmax_out[rid].sample)), rid
+
+    out = {"min_slots": min_s, "max_slots": max_s,
+           "elastic": e_st, "fixed_max": fmax_st, "fixed_min": fmin_st,
+           "migrated_rids": sorted(elastic.migrated_rids)}
+    with open(os.path.join(RESULTS_DIR, "serve_burst.json"), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"serve_burst,wasted_elastic={e_st['wasted_slot_rounds']},"
+          f"wasted_fixed_max={fmax_st['wasted_slot_rounds']},"
+          f"p95_elastic={e_st['latency_rounds_p95']:.0f},"
+          f"p95_fixed_min={fmin_st['latency_rounds_p95']:.0f},"
+          f"retraces={e_st['retraces']}")
+    return out
+
+
 def main() -> None:
     if "--serve-smoke" in sys.argv:
         serve_smoke()
         print("serve_smoke,OK")
+        return
+    if "--serve-burst" in sys.argv:
+        serve_burst()
+        print("serve_burst,OK")
         return
 
     from benchmarks import tables
@@ -115,6 +198,7 @@ def main() -> None:
 
     tables.run_all()
     serve_smoke()
+    serve_burst()
 
     cells = load_cells()
     if cells:

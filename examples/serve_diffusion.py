@@ -21,8 +21,14 @@ staggered SLA trace (``repro.serve.sched.workload``) and compares the chosen
 policy against FIFO and the static engine: deadline-miss rate, preemption
 count, and bit-identity of every non-preempted request's output.
 
+``--min-slots/--max-slots/--resize-hysteresis`` turn on demand-paged
+capacity for the continuous engine (power-of-two bucket ladder, sustained-
+occupancy shrink hysteresis); leaving them unset — or setting
+``min == max`` — is bit-for-bit the fixed-S engine.
+
   PYTHONPATH=src python examples/serve_diffusion.py --requests 12 --cores 8
   PYTHONPATH=src python examples/serve_diffusion.py --sla --policy edf-preempt
+  PYTHONPATH=src python examples/serve_diffusion.py --min-slots 1 --max-slots 8
 """
 import argparse
 
@@ -136,6 +142,13 @@ def main():
                     choices=["fifo", "edf", "edf-preempt"])
     ap.add_argument("--sla", action="store_true",
                     help="run the deadline demo trace instead")
+    ap.add_argument("--min-slots", type=int, default=None,
+                    help="elastic capacity floor (default: fixed S = "
+                         "--max-batch; min == max is bit-for-bit fixed-S)")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="elastic capacity ceiling for the continuous engine")
+    ap.add_argument("--resize-hysteresis", type=int, default=8,
+                    help="sustained-low-occupancy rounds before a shrink")
     args = ap.parse_args()
 
     gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=6,
@@ -155,7 +168,10 @@ def main():
     cont = ContinuousEngine(gm.drift, latent_shape=tuple(args.latent),
                             n_steps=args.steps, num_cores=args.cores,
                             tgrid=tgrid, num_slots=args.max_batch,
-                            rtol=args.rtol, policy=args.policy)
+                            rtol=args.rtol, policy=args.policy,
+                            min_slots=args.min_slots,
+                            max_slots=args.max_slots,
+                            resize_hysteresis=args.resize_hysteresis)
     cont_out, cont_rounds = serve_continuous(cont, reqs, arrivals)
 
     for rid, out in sorted(cont_out.items()):
@@ -182,6 +198,13 @@ def main():
           f"occupancy {st['occupancy']:.2f}, latency p50/p95 = "
           f"{st['latency_rounds_p50']:.0f}/{st['latency_rounds_p95']:.0f} rounds, "
           f"mean speedup {st['mean_speedup']:.2f}x; paper: 2.9x @ 8 cores)")
+    if st["min_slots"] != st["max_slots"]:
+        print(f"[serve] elastic capacity: S in "
+              f"{st['min_slots']}..{st['max_slots']} (now {st['num_slots']}), "
+              f"{st['grows']} grows / {st['shrinks']} shrinks, "
+              f"{st['migrations']} lane migrations, "
+              f"{st['wasted_slot_rounds']} wasted slot-rounds, "
+              f"{st['retraces']} retraces for buckets {st['buckets_visited']}")
     if cont_rounds < static_rounds:
         print(f"[serve] continuous batching wins by "
               f"{static_rounds - cont_rounds} rounds "

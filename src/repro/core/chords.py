@@ -32,7 +32,6 @@ import numpy as np
 
 from repro.core import scheduler
 from repro.core.ode import DriftFn
-from repro.core.rectify import rectify_delta
 from repro.dist.sharding import vmap_logical
 
 
@@ -83,7 +82,8 @@ def accept_test(out, prev, rtol, batch_ndim: int = 0):
     return num / den < rtol
 
 
-def _make_round_step(drift: DriftFn, tgrid, n: int, k: int):
+def _make_round_step(drift: DriftFn, tgrid, n: int, k: int,
+                     use_kernel: bool = False, kernel_interpret: bool = True):
     """One lockstep round over a single [K, ...] core grid.
 
     Returns ``step(carry, i_arr, r) -> (carry, emitted)`` with ``i_arr`` a
@@ -91,7 +91,20 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int):
     The drift is vmapped over the cores axis via ``vmap_logical`` so that an
     ambient ``use_sharding`` context can place the axis on the mesh and
     interior ``shard_act`` constraints stay rank-aware.
+
+    ``use_kernel`` routes the fused solver-step + rectification update
+    through the Pallas VMEM kernel (``repro.kernels.rectify``, one HBM pass
+    instead of ~4 for the six latent-sized operands on TPU) — with
+    bitwise-identical outputs under ``kernel_interpret=True`` (this CPU
+    container's default): in interpret mode the kernel executes as its jnp
+    oracle, which is the same ``rectify_delta`` composition the default
+    path runs, so both flag values trace to the same jaxpr (see
+    ``tests/test_executor.py::test_kernel_path_bitwise_parity`` and
+    ``repro.kernels.rectify.ops`` for why the Pallas interpreter itself
+    cannot give that guarantee). On a TPU target pass
+    ``kernel_interpret=False`` to engage the real Pallas lowering.
     """
+    from repro.kernels.rectify.ops import step_rectify
     vdrift = vmap_logical(drift, "cores", in_axes=(0, 0))
 
     def step(carry: ChordsCarry, i_arr, r):
@@ -107,8 +120,6 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int):
         x_snap = jnp.where(bmask(at_snap, x), x, x_snap)
         f_snap = jnp.where(bmask(at_snap, f), f, f_snap)
 
-        delta = bmask((t_nxt - t_cur), f) * f
-
         # rectification: previous core sits on this core's snapshot position
         x_up = jnp.roll(x, 1, axis=0)
         f_up = jnp.roll(f, 1, axis=0)
@@ -116,10 +127,14 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int):
         k0 = jnp.arange(k)
         fire = (k0 > 0) & (cur_up == p) & alive
         t_p = tgrid[jnp.clip(p, 0, n)]
-        rect = rectify_delta(x_up, f_up, x_snap, f_snap, bmask(t_nxt - t_p, f))
-        delta = delta + jnp.where(bmask(fire, delta), rect, 0.0)
 
-        x_new = x + delta
+        # both flag values flow through step_rectify so they share one jaxpr
+        # on CPU (interpret): the fused update (solver step + rectify_delta
+        # rectification) either as the Pallas kernel or as its jnp oracle
+        x_new = step_rectify(x, f, x_up, f_up, x_snap, f_snap,
+                             t_nxt - t_cur, t_nxt - t_p, fire,
+                             use_kernel=use_kernel,
+                             interpret=kernel_interpret)
         x_snap = jnp.where(bmask(fire, x_new), x_new, x_snap)
         p = jnp.where(fire, nxt, p)
         x = jnp.where(bmask(alive, x_new), x_new, x)
@@ -132,10 +147,12 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int):
 
 
 def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
-                    collect_trace: bool = False):
+                    collect_trace: bool = False, use_kernel: bool = False,
+                    kernel_interpret: bool = True):
     """One lockstep round of Algorithm 1 over a [K, ...] grid (shared by the
     batch sampler and the streaming serve engine). carry = ChordsCarry."""
-    step = _make_round_step(drift, tgrid, n, k)
+    step = _make_round_step(drift, tgrid, n, k, use_kernel=use_kernel,
+                            kernel_interpret=kernel_interpret)
 
     def round_body(carry: ChordsCarry, r):
         new_carry, emitted = step(carry, i_arr, r)
@@ -145,7 +162,9 @@ def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
     return round_body
 
 
-def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int):
+def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int,
+                         use_kernel: bool = False,
+                         kernel_interpret: bool = True):
     """One lockstep round over a fixed [S, K, ...] slot×core grid.
 
     Each slot is an independent request lane with its own init sequence
@@ -160,7 +179,8 @@ def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int):
     Returns ``slot_round(carry, i_arr, r, live) -> (carry, emitted)`` with
     ``emitted`` a [S, K] bool of cores that reached t=1 this round.
     """
-    step = _make_round_step(drift, tgrid, n, k)
+    step = _make_round_step(drift, tgrid, n, k, use_kernel=use_kernel,
+                            kernel_interpret=kernel_interpret)
     vstep = vmap_logical(step, "slots", in_axes=(0, 0, 0))
 
     def slot_round(carry: ChordsCarry, i_arr, r, live):
@@ -206,6 +226,28 @@ def reset_slots(carry: ChordsCarry, mask, x0, i_arr) -> ChordsCarry:
         p=jnp.where(mask[:, None], i_arr, carry.p),
         finals=jnp.where(m, 0.0, carry.finals),
     )
+
+
+def gather_slots(dst, src, mask, src_idx):
+    """Masked-gather lane migration: the cross-grid generalization of
+    :func:`reset_slots`.
+
+    Where ``reset_slots`` re-initializes lanes of ONE grid in place,
+    ``gather_slots`` copies whole lanes *between* grids of different slot
+    counts: ``dst``/``src`` are pytrees whose leaves all lead with the slot
+    axis ([S_dst, ...] / [S_src, ...]); ``mask`` is [S_dst] bool selecting
+    destination lanes to fill; ``src_idx`` is [S_dst] int32 giving, per
+    destination lane, the source lane to copy (read only where ``mask``).
+
+    Every migrated lane's carry is a pure row gather — a bit-exact copy, no
+    arithmetic — so a request whose lane migrates during an elastic resize
+    produces the same output, bit for bit, as if the grid had never resized
+    (tested invariant). Unmasked destination lanes are untouched.
+    """
+    idx = jnp.clip(jnp.asarray(src_idx, jnp.int32), 0,
+                   max(0, jax.tree_util.tree_leaves(src)[0].shape[0] - 1))
+    return jax.tree_util.tree_map(
+        lambda d, s: jnp.where(bmask(mask, d), s[idx], d), dst, src)
 
 
 def chords_sample(

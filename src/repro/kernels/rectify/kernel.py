@@ -25,7 +25,9 @@ def _kernel(x_ref, f_ref, xu_ref, fu_ref, xs_ref, fs_ref, dt_ref, ds_ref,
     x = x_ref[...]
     delta = dt * f_ref[...]
     rect = ds * (fu_ref[...] - fs_ref[...]) + (xu_ref[...] - xs_ref[...])
-    o_ref[...] = x + delta + jnp.where(fire != 0, rect, 0.0)
+    # ops and association mirror fused_step_rectify_ref exactly — the oracle
+    # is the float-semantics source of truth for this body
+    o_ref[...] = x + (delta + jnp.where(fire != 0, rect, 0.0))
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))

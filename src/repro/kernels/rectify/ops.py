@@ -1,8 +1,17 @@
 """Jitted public wrapper for the fused step+rectify kernel.
 
-On TPU targets pass ``interpret=False``; in this CPU container the kernel body
-executes via the Pallas interpreter (bit-accurate vs the TPU lowering for
-this elementwise op).
+On TPU targets pass ``interpret=False`` to run the real Pallas lowering.
+In this CPU container (``interpret=True``, the default) the kernel is
+executed as its jnp oracle (``fused_step_rectify_ref`` — literally the
+``core.rectify.rectify_delta`` composition) rather than through
+``pl.pallas_call(interpret=True)``: the Pallas interpreter compiles the
+body per grid tile, where LLVM's FMA-contraction choices are free to
+differ from the surrounding program's — a 1-ulp, context-dependent
+nondeterminism that would break the serve layer's contract that flipping
+``use_kernel`` never changes an output bit. The oracle IS the body's
+float semantics (the Pallas lowering is asserted against it in
+``tests/test_kernels.py``), so interpret-mode serving is bit-identical to
+the rectify_delta path by construction.
 """
 from __future__ import annotations
 
@@ -19,8 +28,8 @@ def step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
     shape = x.shape
     flat = lambda a: a.reshape(k, -1)
     args = tuple(map(flat, (x, f, x_up, f_up, x_snap, f_snap)))
-    if use_kernel:
-        out = fused_step_rectify(*args, dt, dsnap, fire, interpret=interpret)
+    if use_kernel and not interpret:
+        out = fused_step_rectify(*args, dt, dsnap, fire, interpret=False)
     else:
         out = fused_step_rectify_ref(*args, dt, dsnap, fire)
     return out.reshape(shape)

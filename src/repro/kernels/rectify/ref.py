@@ -1,7 +1,17 @@
-"""Pure-jnp oracle for the fused CHORDS step+rectify update (paper Eq. 3-4)."""
+"""Pure-jnp oracle for the fused CHORDS step+rectify update (paper Eq. 3-4).
+
+The rectification term is *literally* ``core.rectify.rectify_delta`` — this
+oracle is the single source of truth for the fused update's float
+semantics: the Pallas kernel body mirrors it op for op (asserted in
+``tests/test_kernels.py``), and the serve hot path executes it directly in
+interpret mode so that ``use_kernel`` is bitwise-neutral on CPU (see
+``repro.kernels.rectify.ops``).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core.rectify import rectify_delta
 
 
 def fused_step_rectify_ref(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire):
@@ -9,8 +19,9 @@ def fused_step_rectify_ref(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire):
 
     x/f/x_up/f_up/x_snap/f_snap: [K, M] latents+drifts (M = flattened latent).
     dt, dsnap: [K] step spans; fire: [K] bool rectification trigger.
-    Returns x_new = x + dt*f + fire * (dsnap*(f_up - f_snap) + x_up - x_snap).
+    Returns x_new = x + dt*f + fire * r_theta, associated exactly as the
+    kernel body computes it: ``x + (delta + where(fire, rect, 0))``.
     """
     delta = dt[:, None] * f
-    rect = dsnap[:, None] * (f_up - f_snap) + (x_up - x_snap)
-    return x + delta + jnp.where(fire[:, None], rect, 0.0)
+    rect = rectify_delta(x_up, f_up, x_snap, f_snap, dsnap[:, None])
+    return x + (delta + jnp.where(fire[:, None], rect, 0.0))

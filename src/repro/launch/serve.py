@@ -13,6 +13,12 @@ rounds from submission) to every request so the deadline-miss rate is
 exercised; ``--device-rounds R`` amortizes the per-round host sync over up
 to R rounds on device while the grid is busy.
 
+``--min-slots/--max-slots`` enable demand-paged capacity: S moves along
+power-of-two buckets, growing immediately on queued demand and shrinking
+after ``--resize-hysteresis`` rounds of sustained low occupancy (policies
+can veto a shrink that would endanger a queued deadline). Omitting both
+keeps the fixed-S grid bit-for-bit.
+
   PYTHONPATH=src python -m repro.launch.serve --arch chords-dit-xl --reduced \
       --requests 8 --steps 50 --cores 8 --slots 4 \
       --policy edf-preempt --deadline-rounds 60 --device-rounds 8
@@ -40,6 +46,17 @@ def main():
     ap.add_argument("--latent-dim", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4,
                     help="slot count S (doubles as --static max_batch)")
+    ap.add_argument("--min-slots", type=int, default=None,
+                    help="elastic capacity floor: S shrinks to this bucket "
+                         "under sustained low occupancy (default: fixed S "
+                         "= --slots; min == max disables every resize path "
+                         "bit-for-bit)")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="elastic capacity ceiling: S grows toward this "
+                         "bucket when queued demand exceeds free lanes")
+    ap.add_argument("--resize-hysteresis", type=int, default=8,
+                    help="lockstep rounds of sustained low occupancy "
+                         "required before the grid pages slots out")
     ap.add_argument("--rtol", type=float, default=0.05)
     ap.add_argument("--static", action="store_true",
                     help="serve with the static-batch engine instead")
@@ -83,7 +100,9 @@ def main():
     engine = ContinuousEngine(
         drift=drift, latent_shape=(1, args.seq, args.latent_dim),
         n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
-        num_slots=args.slots, rtol=args.rtol, policy=args.policy)
+        num_slots=args.slots, rtol=args.rtol, policy=args.policy,
+        min_slots=args.min_slots, max_slots=args.max_slots,
+        resize_hysteresis=args.resize_hysteresis)
     for i in range(args.requests):
         engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i),
                               deadline_rounds=args.deadline_rounds))
@@ -105,6 +124,14 @@ def main():
           f"{st['preemptions']} preemptions "
           f"({st['preempted_rounds_wasted']} rounds wasted), "
           f"{st['host_syncs']} host syncs for {st['rounds_total']} rounds")
+    if st["min_slots"] != st["max_slots"]:
+        print(f"[serve] elastic: S in {st['min_slots']}..{st['max_slots']} "
+              f"(now {st['num_slots']}), {st['grows']} grows / "
+              f"{st['shrinks']} shrinks ({st['resize_vetoes']} vetoed), "
+              f"{st['migrations']} lane migrations, "
+              f"{st['wasted_slot_rounds']} wasted slot-rounds, "
+              f"{st['retraces']} retraces for buckets "
+              f"{st['buckets_visited']}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 from repro.serve.engine import (ChordsEngine, ContinuousEngine, Request,  # noqa: F401
-                                SampleOut, SlotState, StreamingSampler)
+                                SampleOut, StreamingSampler, bucket_ladder)
+from repro.serve.executor import (GridPrograms, GridSpec, RoundExecutor,  # noqa: F401
+                                  SlotState, StreamSpec)
 from repro.serve.sched import (AdmissionQueue, CostModel, EdfPolicy,  # noqa: F401
                                EdfPreemptPolicy, FifoPolicy, POLICIES,
-                               Policy, get_policy)
+                               Policy, Resize, ResizeProposal, get_policy)
 from repro.serve.steps import greedy_generate, make_decode_step, make_prefill  # noqa: F401

@@ -7,18 +7,29 @@ saved. ``ChordsEngine`` is the *static-batch* server around it: queued
 requests are padded to a fixed ``max_batch`` (one jit trace, ever) and the
 batch is held until its slowest request converges.
 
-``ContinuousEngine`` is the production runtime: a fixed ``[S, K, ...]``
-slot×core grid (``repro.core.chords.make_slot_round_body``) where every
-engine round advances all live slots by one lockstep round, an admission
-queue feeds free slots *every round* (``reset_slots`` re-initializes the
-lane in place — no retrace), finished slots drain immediately, and per-slot
-accept state (rtol, init sequence from request priority, round counter) rides
-the jitted :class:`SlotState`. Requests therefore never queue behind a
-straggler in another lane. See ``src/repro/serve/README.md`` for the slot
-lifecycle and S×K sizing guidance.
+``ContinuousEngine`` is the production runtime: a ``[S, K, ...]`` slot×core
+grid where every engine round advances all live slots by one lockstep round,
+an admission queue feeds free slots *every round* (masked in-place reset —
+no retrace), finished slots drain immediately, and per-slot accept state
+(rtol, init sequence from request priority, round counter) rides the jitted
+``SlotState``. Requests therefore never queue behind a straggler in another
+lane. See ``src/repro/serve/README.md`` for the slot lifecycle and S×K
+sizing guidance.
 
-Admission ordering, deadline handling, and preemption live in the
-``repro.serve.sched`` policy layer (FIFO remains the default); the
+Every compiled program — the slot round / admission / multi-round programs
+and the streaming sampler's while_loop — is owned by a shared
+:class:`repro.serve.executor.RoundExecutor` and cached per
+:class:`~repro.serve.executor.GridSpec` / ``StreamSpec`` key; the engines
+hold no private compile paths. That is also what makes the slot grid
+**demand-paged**: ``ContinuousEngine(min_slots=..., max_slots=...)`` grows
+and shrinks S along power-of-two capacity buckets (queue depth pages slots
+in immediately; sustained low occupancy pages them out behind a hysteresis
+window and a scheduling-policy veto), live lanes migrating between grids via
+a bit-exact masked gather — a resize is a capacity change, never a result
+change.
+
+Admission ordering, deadline handling, preemption, and the resize veto live
+in the ``repro.serve.sched`` policy layer (FIFO remains the default); the
 multi-round device loop (``step(max_rounds_on_device=R)``) amortizes the
 per-round done-flag readback when the grid is busy.
 """
@@ -27,20 +38,18 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import scheduler
-from repro.core.chords import (ChordsCarry, accept_test, bmask,
-                               chords_init_carry, make_round_body,
-                               make_slot_round_body, reset_slots,
-                               slot_init_carry)
 from repro.core.init_sequence import make_sequence
+from repro.serve.executor import (GridSpec, RoundExecutor, SlotState,
+                                  StreamSpec, ambient_sharding_tag)
 from repro.serve.sched.cost import CostModel
-from repro.serve.sched.policy import Decision, EngineView, LaneView, get_policy
+from repro.serve.sched.policy import (Decision, EngineView, LaneView,
+                                      ResizeProposal, get_policy)
 from repro.serve.sched.queue import AdmissionQueue, QueueItem
 
 
@@ -52,6 +61,26 @@ class SampleOut:
     accepted_core: object
     speedup: object
     latency_rounds: Optional[int] = None  # queue wait + compute (engines only)
+
+
+def _resolve_executor(drift, tgrid, n_steps, executor,
+                      use_kernel) -> RoundExecutor:
+    """Engine-side executor setup: build one, or adopt the provided one.
+
+    ``use_kernel=None`` (the engine default) inherits the executor's
+    setting; an explicit bool that *contradicts* a provided executor raises
+    instead of being silently ignored — the flag lives on the executor,
+    which owns compilation.
+    """
+    if executor is None:
+        return RoundExecutor(drift, tgrid, n_steps,
+                             use_kernel=bool(use_kernel))
+    if use_kernel is not None and bool(use_kernel) != executor.use_kernel:
+        raise ValueError(
+            f"use_kernel={use_kernel} conflicts with the provided "
+            f"executor's use_kernel={executor.use_kernel}; configure the "
+            f"flag on the RoundExecutor itself")
+    return executor
 
 
 class StreamingSampler:
@@ -67,11 +96,17 @@ class StreamingSampler:
     ``sample(x0, live=...)`` masks out padding rows: dead rows are born
     pre-accepted so they can never extend the while_loop, which is what lets
     ``ChordsEngine`` pad partial batches to a fixed shape (single jit trace).
+
+    The compiled program comes from the ``executor`` trace cache (built on
+    demand when none is passed); ``use_kernel=True`` routes the fused Pallas
+    step+rectify kernel into the round body, bitwise-identical outputs.
     """
 
     def __init__(self, drift, n_steps: int, num_cores: int, tgrid,
                  i_seq: Optional[Sequence[int]] = None, rtol: float = 0.05,
-                 batched: bool = False):
+                 batched: bool = False,
+                 executor: Optional[RoundExecutor] = None,
+                 use_kernel: Optional[bool] = None):
         self.n = n_steps
         self.k = num_cores
         self.tgrid = tgrid
@@ -81,49 +116,11 @@ class StreamingSampler:
         self.rtol = rtol
         self.drift = drift
         self.batched = batched
-        self._jitted = jax.jit(self._run)
-
-    def _run(self, x0, live):
-        round_body = make_round_body(self.drift, self.tgrid, self.i_arr,
-                                     self.n, self.k)
-        emit = jnp.asarray(scheduler.emit_rounds(self.i_seq, self.n))
-        rtol, n, batched = self.rtol, self.n, self.batched
-        bdim = 1 if batched else 0
-        def cond(state):
-            _, r, accepted = state[0], state[1], state[2]
-            return (~jnp.all(accepted)) & (r <= n)
-
-        def body(state):
-            (carry, r, accepted, last_out, has_last, chosen, rounds,
-             result) = state
-            carry, _ = round_body(carry, r)
-            emitted_k = jnp.argmax(emit == r)  # core emitting this round (if any)
-            any_emit = jnp.any(emit == r)
-            out = carry.x[emitted_k]
-            ok = any_emit & has_last & accept_test(out, last_out, rtol, bdim) \
-                & (~accepted)
-            result = jnp.where(bmask(ok, out), out, result)
-            rounds = jnp.where(ok, r, rounds)
-            chosen = jnp.where(ok, emitted_k, chosen)
-            accepted = accepted | ok
-            last_out = jnp.where(any_emit, out, last_out)
-            has_last = has_last | any_emit
-            return (carry, r + 1, accepted, last_out, has_last, chosen,
-                    rounds, result)
-
-        carry = chords_init_carry(x0, self.i_arr, self.k)
-        state = (carry, jnp.asarray(1),
-                 ~live, jnp.zeros_like(x0),
-                 jnp.asarray(False), jnp.zeros(live.shape, jnp.int32),
-                 jnp.zeros(live.shape, jnp.int32), jnp.zeros_like(x0))
-        (carry, r, accepted, last_out, _, chosen, rounds,
-         result) = jax.lax.while_loop(cond, body, state)
-        # requests that never early-exited take the final emission —
-        # core 0's full-round output, i.e. the sequential solve
-        fell_through = live & (rounds == 0)
-        result = jnp.where(bmask(fell_through, result), last_out, result)
-        rounds = jnp.where(fell_through, n, rounds)
-        return result, rounds, chosen
+        self.executor = _resolve_executor(drift, tgrid, n_steps, executor,
+                                          use_kernel)
+        self._jitted = self.executor.stream(StreamSpec(
+            num_cores=num_cores, i_seq=tuple(self.i_seq), rtol=rtol,
+            batched=batched, sharding=ambient_sharding_tag()))
 
     def sample(self, x0, live=None) -> SampleOut:
         req_shape = (x0.shape[0],) if self.batched else ()
@@ -168,12 +165,17 @@ class ChordsEngine:
 
     def __init__(self, drift_builder: Callable, latent_shape: tuple,
                  n_steps: int, num_cores: int, tgrid, max_batch: int = 8,
-                 rtol: float = 0.05):
+                 rtol: float = 0.05,
+                 executor: Optional[RoundExecutor] = None,
+                 use_kernel: Optional[bool] = None):
         self.latent_shape = latent_shape
         self.max_batch = max_batch
         self.drift_builder = drift_builder
-        self.sampler = StreamingSampler(drift_builder, n_steps, num_cores, tgrid,
-                                        rtol=rtol, batched=True)
+        self.sampler = StreamingSampler(drift_builder, n_steps, num_cores,
+                                        tgrid, rtol=rtol, batched=True,
+                                        executor=executor,
+                                        use_kernel=use_kernel)
+        self.executor = self.sampler.executor
         self.queue: list[Request] = []
         self.stats = []
 
@@ -210,37 +212,54 @@ class ChordsEngine:
         return int(sum(s["rounds"] for s in self.stats))
 
 
-class SlotState(NamedTuple):
-    """Device-side state of the continuous-batching slot grid (a pytree)."""
-
-    carry: ChordsCarry     # [S, K, ...] lockstep grid
-    i_arr: jax.Array       # [S, K] per-slot init sequence
-    rtol: jax.Array        # [S] per-slot accept tolerance
-    rounds: jax.Array      # [S] next lockstep round for each slot (1-based)
-    live: jax.Array        # [S] slot occupied and still iterating
-    done: jax.Array        # [S] converged, result buffered for drain
-    has_last: jax.Array    # [S] a previous streamed output exists
-    last_out: jax.Array    # [S, ...] latest streamed output per slot
-    result: jax.Array      # [S, ...] accepted output (valid where done)
-    rounds_used: jax.Array  # [S] lockstep rounds at accept
-    chosen: jax.Array      # [S] accepted core index
+def bucket_ladder(min_slots: int, max_slots: int) -> List[int]:
+    """Power-of-two capacity buckets from ``min_slots`` up to ``max_slots``
+    (the top bucket is clamped to ``max_slots`` even off-ladder)."""
+    if min_slots < 1 or min_slots > max_slots:
+        raise ValueError(f"need 1 <= min_slots <= max_slots, got "
+                         f"{min_slots}..{max_slots}")
+    b, out = min_slots, [min_slots]
+    while b < max_slots:
+        b = min(b * 2, max_slots)
+        out.append(b)
+    return out
 
 
 class ContinuousEngine:
-    """Continuous-batching CHORDS runtime over a fixed [S, K, ...] slot grid.
+    """Continuous-batching CHORDS runtime over a demand-paged [S, K, ...]
+    slot grid.
 
-    Every ``step()``: (1) ask the scheduling ``policy`` which queued requests
+    Every ``step()``: (0) with elastic capacity enabled, maybe resize the
+    grid (see below); (1) ask the scheduling ``policy`` which queued requests
     to admit into which slots — and, for a preemptive policy, which in-flight
-    lanes to evict first — then apply the decision with the masked
-    ``reset_slots`` program (no retrace, untouched lanes bit-identical);
+    lanes to evict first — then apply the decision with the masked in-place
+    admission program (no retrace, untouched lanes bit-identical);
     (2) run the lockstep round for all live slots inside a single jitted
     call — or, with ``step(max_rounds_on_device=R)``, up to R rounds inside
     one ``lax.while_loop`` that returns early the moment any slot's accept
     fires, so a busy grid pays ONE host sync per R rounds instead of one per
     round (the ``host_syncs`` counter tracks exactly these done-flag
     readbacks); (3) drain slots whose accept fired. A request's output is
-    identical whether its slot is fresh or recycled, and a slot running K==1
-    degenerates to the sequential solver (tested invariants).
+    identical whether its slot is fresh, recycled, or migrated, and a slot
+    running K==1 degenerates to the sequential solver (tested invariants).
+
+    **Elastic capacity** (``min_slots < max_slots``): S moves along the
+    power-of-two bucket ladder. Growth is immediate — whenever queued demand
+    exceeds free capacity, S jumps to the smallest bucket that fits
+    ``live + queued`` (policies cannot veto growth). Shrinking is
+    hysteresis-gated: only after occupancy has fit the next bucket down for
+    ``resize_hysteresis`` consecutive lockstep rounds, and only if the
+    policy does not veto (``Policy.consider_resize`` — EDF
+    policies veto a shrink that would push a queued deadline into a
+    predicted miss). Live lanes migrate to the new grid via a masked gather
+    that copies each lane's carry bit-exactly, so a resize never changes any
+    request's output. With ``min_slots == max_slots`` (the default) every
+    resize path is dead code and behavior is bit-for-bit the fixed-S engine.
+
+    All compiled programs come from the ``executor`` trace cache: one
+    compile per distinct ``GridSpec`` (capacity bucket) ever touched, cache
+    hits on re-entry — ``stats()['retraces']`` is bounded by the number of
+    distinct buckets visited.
 
     ``policy`` is ``'fifo'`` (default, the original submission-order
     behavior), ``'edf'``, ``'edf-preempt'``, or any
@@ -248,134 +267,162 @@ class ContinuousEngine:
     deadline_rounds``) are relative to submission, in lockstep-round units;
     ``stats()`` reports the miss rate over requests that declared one.
 
-    ``num_cores`` is K for every slot; ``num_slots`` is S. On a mesh, size S
-    to the 'data' axis (slots shard over it under ``use_sharding``) and K×
-    the per-slot latent to what one shard's HBM holds — see serve/README.md.
+    ``num_cores`` is K for every slot. On a mesh, size S to the 'data' axis
+    (slots shard over it under ``use_sharding``) and K× the per-slot latent
+    to what one shard's HBM holds — see serve/README.md.
     """
 
     def __init__(self, drift: Callable, latent_shape: tuple, n_steps: int,
                  num_cores: int, tgrid, num_slots: int = 4, rtol: float = 0.05,
                  priority_speedup: float = 1.25, policy=None,
-                 aging_rounds: int = 32):
+                 aging_rounds: int = 32,
+                 min_slots: Optional[int] = None,
+                 max_slots: Optional[int] = None,
+                 resize_hysteresis: int = 8,
+                 executor: Optional[RoundExecutor] = None,
+                 use_kernel: Optional[bool] = None):
         self.latent_shape = tuple(latent_shape)
         self.n = n_steps
         self.k = num_cores
-        self.s = num_slots
         self.rtol = rtol
         self.priority_speedup = priority_speedup
         self.policy = get_policy(policy)
         self.cost = CostModel(num_cores, n_steps,
                               priority_speedup=priority_speedup)
-        self._slot_round = make_slot_round_body(drift, tgrid, n_steps, num_cores)
-        self._round = jax.jit(self._round_fn)
-        self._multi = jax.jit(self._multi_round_fn)
-        self._admit = jax.jit(self._admit_fn)
-        self.state = self._init_state()
+        self.executor = _resolve_executor(drift, tgrid, n_steps, executor,
+                                          use_kernel)
+        if min_slots is None and max_slots is None:
+            self.min_slots = self.max_slots = int(num_slots)
+        else:
+            self.min_slots = int(min_slots if min_slots is not None
+                                 else num_slots)
+            self.max_slots = int(max_slots if max_slots is not None
+                                 else max(num_slots, self.min_slots))
+        self._ladder = bucket_ladder(self.min_slots, self.max_slots)
+        # the trace cache must hold every capacity bucket (on top of what
+        # other engines sharing this executor already cached), or ladder
+        # re-entry would evict-and-retrace — breaking the retraces <=
+        # distinct-buckets contract
+        self.executor.reserve_grid_capacity(len(self._ladder))
+        self.resize_hysteresis = max(1, int(resize_hysteresis))
+        self._install_grid(self._ladder[0])  # demand-paged: start smallest
+        self._buckets_visited = {self.s}
         self.queue = AdmissionQueue(aging_rounds=aging_rounds)
-        self._slot_item: List[Optional[QueueItem]] = [None] * num_slots
-        self._slot_iseq: List[Optional[list]] = [None] * num_slots
-        self._slot_rtol = np.full((num_slots,), rtol, np.float32)  # host mirror
-        self._admit_round: List[int] = [0] * num_slots
         self.round_count = 0
         self.host_syncs = 0  # done-flag readbacks (the per-round sync killed
         # by the multi-round device loop)
         self.preempted_rids: set = set()
+        self.migrated_rids: set = set()  # rids whose lane crossed a resize
         self._preempt_count = 0
         self._preempt_rounds_wasted = 0
         self._deadline_total = 0
         self._deadline_misses = 0
-        self._live_sum = 0  # occupancy numerator
+        self._live_sum = 0   # occupancy numerator (live lane-rounds)
+        self._slot_rounds = 0   # capacity integral: sum of S over run rounds
+        self._wasted_sum = 0    # dead-lane rounds actually executed
+        self._low_streak = 0    # consecutive rounds of shrinkable occupancy
+        self._resizes = 0
+        self._grow_count = 0
+        self._shrink_count = 0
+        self._resize_vetoes = 0
+        self._migrations = 0
         self._latencies: List[int] = []
-        self._served: List[Tuple[int, SampleOut]] = []
+        self._speedups: List[float] = []  # floats only — retaining served
+        # SampleOuts (full latents) would leak without bound in a
+        # long-lived serving process
 
-    # -- device programs ------------------------------------------------------
+    # -- grid management ------------------------------------------------------
 
-    def _init_state(self) -> SlotState:
-        s, k = self.s, self.k
-        lat = jnp.zeros((s,) + self.latent_shape, jnp.float32)
-        return SlotState(
-            carry=slot_init_carry(s, k, self.latent_shape),
-            i_arr=jnp.zeros((s, k), jnp.int32),
-            rtol=jnp.full((s,), self.rtol, jnp.float32),
-            rounds=jnp.ones((s,), jnp.int32),
-            live=jnp.zeros((s,), bool),
-            done=jnp.zeros((s,), bool),
-            has_last=jnp.zeros((s,), bool),
-            last_out=lat, result=lat,
-            rounds_used=jnp.zeros((s,), jnp.int32),
-            chosen=jnp.zeros((s,), jnp.int32),
-        )
+    def _spec(self, s: int) -> GridSpec:
+        # the ambient mesh context is part of the cache key: a program
+        # traced under use_sharding must never be served to a bare engine
+        return GridSpec(num_slots=s, num_cores=self.k,
+                        latent_shape=self.latent_shape,
+                        sharding=ambient_sharding_tag())
 
-    def _round_fn(self, st: SlotState) -> SlotState:
-        """One lockstep round for every live slot + per-slot accept test."""
-        active = st.live
-        carry, _ = self._slot_round(st.carry, st.i_arr, st.rounds, active)
-        emit = scheduler.emit_rounds_jnp(st.i_arr, self.n)  # [S, K]
-        r = st.rounds
-        hit = (emit == r[:, None]) & active[:, None]
-        any_emit = jnp.any(hit, axis=1)
-        ek = jnp.argmax(hit, axis=1).astype(jnp.int32)  # slowest emitter wins
-        out = carry.x[jnp.arange(self.s), ek]  # [S, ...]
+    def _install_grid(self, s: int):
+        """Fresh grid at capacity ``s`` (construction / empty resize)."""
+        self.s = s
+        self.spec = self._spec(s)
+        self._prog = self.executor.grid(self.spec)
+        self.state = self._prog.init_state()
+        self._slot_item: List[Optional[QueueItem]] = [None] * s
+        self._slot_iseq: List[Optional[list]] = [None] * s
+        self._slot_rtol = np.full((s,), self.rtol, np.float32)  # host mirror
+        self._admit_round: List[int] = [0] * s
 
-        ok = any_emit & st.has_last & accept_test(out, st.last_out, st.rtol, 1)
-        # core 0's emission is the exact sequential solve: force-accept it so
-        # no request outlives its own N rounds
-        final = any_emit & (r >= emit[:, 0])
-        acc = (ok | final) & active
-        result = jnp.where(bmask(acc, out), out, st.result)
-        return SlotState(
-            carry=carry,
-            i_arr=st.i_arr,
-            rtol=st.rtol,
-            rounds=jnp.where(active, r + 1, r),
-            live=st.live & ~acc,
-            done=st.done | acc,
-            has_last=st.has_last | any_emit,
-            last_out=jnp.where(bmask(any_emit, out), out, st.last_out),
-            result=result,
-            rounds_used=jnp.where(acc, r, st.rounds_used),
-            chosen=jnp.where(acc, ek, st.chosen),
-        )
+    def _resize_to(self, new_s: int):
+        """Move the grid to capacity ``new_s``, migrating live lanes.
 
-    def _admit_fn(self, st: SlotState, mask, x0, i_arr, rtol) -> SlotState:
-        """Masked admission: reset lanes + per-slot accept state in place."""
-        carry = reset_slots(st.carry, mask, x0, i_arr)
-        m_lat = bmask(mask, st.last_out)
-        return SlotState(
-            carry=carry,
-            i_arr=jnp.where(mask[:, None], i_arr, st.i_arr),
-            rtol=jnp.where(mask, rtol, st.rtol),
-            rounds=jnp.where(mask, 1, st.rounds),
-            live=st.live | mask,
-            done=st.done & ~mask,
-            has_last=st.has_last & ~mask,
-            last_out=jnp.where(m_lat, 0.0, st.last_out),
-            result=jnp.where(m_lat, 0.0, st.result),
-            rounds_used=jnp.where(mask, 0, st.rounds_used),
-            chosen=jnp.where(mask, 0, st.chosen),
-        )
-
-    def _multi_round_fn(self, st: SlotState, done0, max_rounds):
-        """Up to ``max_rounds`` lockstep rounds in ONE device program.
-
-        The ``lax.while_loop`` exits as soon as any slot's accept fires
-        (``done`` rises relative to ``done0``, the flags at entry — drained
-        slots keep their stale flag until re-admission, so the delta is
-        exactly "newly finished") or the round budget elapses. The host only
-        reads back afterwards: one sync amortized over up to R rounds.
-        ``max_rounds`` is a traced scalar, so varying R never retraces.
+        Migration is a masked row gather (``executor.migrate``): every
+        migrated lane's carry + accept state is copied bit-exactly into the
+        lowest-indexed destination lanes, so in-flight requests cannot
+        observe the resize.
         """
-        def cond(c):
-            s, i = c
-            return (i < max_rounds) & jnp.any(s.live) \
-                & ~jnp.any(s.done & ~done0)
+        occupied = [i for i, it in enumerate(self._slot_item)
+                    if it is not None]
+        assert len(occupied) <= new_s, (occupied, new_s)
+        old_spec, old_state = self.spec, self.state
+        old = (self._slot_item, self._slot_iseq, self._slot_rtol,
+               self._admit_round)
+        self._install_grid(new_s)
+        if occupied:
+            mask = np.zeros((new_s,), bool)
+            src = np.zeros((new_s,), np.int32)
+            for dst, s_old in enumerate(occupied):
+                mask[dst], src[dst] = True, s_old
+                self._slot_item[dst] = old[0][s_old]
+                self._slot_iseq[dst] = old[1][s_old]
+                self._slot_rtol[dst] = old[2][s_old]
+                self._admit_round[dst] = old[3][s_old]
+                self.migrated_rids.add(old[0][s_old].payload.rid)
+            self._migrations += len(occupied)
+            self.state = self.executor.migrate(old_spec, self.spec)(
+                self.state, old_state, jnp.asarray(mask), jnp.asarray(src))
+        self._resizes += 1
+        self._buckets_visited.add(new_s)
 
-        def body(c):
-            s, i = c
-            return self._round_fn(s), i + 1
+    def _next_lower_bucket(self) -> Optional[int]:
+        i = self._ladder.index(self.s)
+        return self._ladder[i - 1] if i > 0 else None
 
-        return jax.lax.while_loop(cond, body,
-                                  (st, jnp.asarray(0, jnp.int32)))
+    def _maybe_resize(self):
+        """Demand paging: grow on queued demand, shrink on sustained idle."""
+        if self.min_slots == self.max_slots:
+            return
+        live_ct = sum(it is not None for it in self._slot_item)
+        if len(self.queue) > self.s - live_ct and self.s < self.max_slots:
+            demand = live_ct + len(self.queue)
+            target = self.s
+            for b in self._ladder:
+                if b > self.s:
+                    target = b
+                    if b >= demand:
+                        break
+            self._resize_to(target)  # growth is never vetoed
+            self._grow_count += 1
+            self._low_streak = 0
+            return
+        lower = self._next_lower_bucket()
+        if lower is None or live_ct > lower \
+                or self._low_streak < self.resize_hysteresis:
+            return
+        # queued work does NOT block the proposal — whether the smaller
+        # grid can still serve it (deadlines included) is the policy's call
+        proposal = ResizeProposal(current_slots=self.s, new_slots=lower,
+                                  live_lanes=live_ct, queued=len(self.queue))
+        view = EngineView(now=self.round_count, queue=self.queue,
+                          free_slots=[i for i, it in
+                                      enumerate(self._slot_item)
+                                      if it is None],
+                          lanes=self._lane_views(), cost=self.cost)
+        if self.policy.consider_resize(view, proposal) is None:
+            self._resize_vetoes += 1
+            self._low_streak = 0  # re-arm: ask again after a full window
+            return
+        self._resize_to(lower)
+        self._shrink_count += 1
+        self._low_streak = 0
 
     # -- host loop ------------------------------------------------------------
 
@@ -438,9 +485,9 @@ class ContinuousEngine:
             self._slot_item[a.slot] = a.item
             self._slot_iseq[a.slot] = list(a.i_seq)
             self._admit_round[a.slot] = self.round_count
-        self.state = self._admit(self.state, jnp.asarray(mask),
-                                 jnp.asarray(x0), jnp.asarray(i_arr),
-                                 jnp.asarray(self._slot_rtol))
+        self.state = self._prog.admit(self.state, jnp.asarray(mask),
+                                      jnp.asarray(x0), jnp.asarray(i_arr),
+                                      jnp.asarray(self._slot_rtol))
 
     def _amortizable(self) -> bool:
         """May the host stay away for several rounds? Yes when nothing it
@@ -455,7 +502,9 @@ class ContinuousEngine:
 
     def step(self, max_rounds_on_device: int = 1
              ) -> list[tuple[int, SampleOut]]:
-        """Policy decision → lockstep round(s) → drain. Returns finished."""
+        """Resize check → policy decision → lockstep round(s) → drain.
+        Returns finished requests as [(rid, SampleOut)]."""
+        self._maybe_resize()
         free = [i for i, it in enumerate(self._slot_item) if it is None]
         if len(self.queue) and (free or self.policy.preemptive):
             view = EngineView(now=self.round_count, queue=self.queue,
@@ -463,25 +512,32 @@ class ContinuousEngine:
                               cost=self.cost)
             self._apply_decision(self.policy.decide(view))
         if not self.has_inflight:
+            # a fully idle grid is the lowest occupancy there is: idle
+            # steps count toward the shrink hysteresis so a drained engine
+            # still pages its slots out (each idle step ~ one round)
+            if self.min_slots != self.max_slots and not len(self.queue):
+                self._low_streak += 1
             return []
 
         live_ct = sum(it is not None for it in self._slot_item)
         r_dev = max(1, int(max_rounds_on_device))
         if r_dev > 1 and self._amortizable():
-            st, ran_dev = self._multi(self.state, self.state.done,
-                                      jnp.asarray(r_dev, jnp.int32))
+            st, ran_dev = self._prog.multi(self.state, self.state.done,
+                                           jnp.asarray(r_dev, jnp.int32))
             self.state = st
             ran, done, rounds_used, chosen = jax.device_get(
                 (ran_dev, st.done, st.rounds_used, st.chosen))
             ran = int(ran)
         else:
-            self.state = self._round(self.state)
+            self.state = self._prog.round(self.state)
             done, rounds_used, chosen = jax.device_get(
                 (self.state.done, self.state.rounds_used, self.state.chosen))
             ran = 1
         self.host_syncs += 1
         self.round_count += ran
         self._live_sum += live_ct * ran
+        self._slot_rounds += self.s * ran
+        self._wasted_sum += (self.s - live_ct) * ran
 
         out: list[tuple[int, SampleOut]] = []
         for slot in range(self.s):
@@ -503,11 +559,23 @@ class ContinuousEngine:
                 speedup=self.n / max(1, ru),
                 latency_rounds=latency,
             )
+            # item.rtol (not the float32 device mirror) so the table key
+            # matches the one predictions are queried with
+            self.cost.observe_accept(self._slot_iseq[slot], item.rtol, ru)
             self._latencies.append(latency)
-            self._served.append((item.payload.rid, res))
+            self._speedups.append(res.speedup)
             out.append((item.payload.rid, res))
             self._slot_item[slot] = None  # slot is free; done flag stays
             # until the next admission clears it (the lane is frozen)
+
+        # shrink hysteresis: occupancy must fit the next bucket down for
+        # `resize_hysteresis` consecutive lockstep rounds
+        lower = self._next_lower_bucket()
+        live_after = sum(it is not None for it in self._slot_item)
+        if lower is not None and live_after <= lower:
+            self._low_streak += ran
+        else:
+            self._low_streak = 0
         return out
 
     def run_until_drained(self, max_rounds: Optional[int] = None,
@@ -515,7 +583,7 @@ class ContinuousEngine:
                           ) -> list[tuple[int, SampleOut]]:
         """Step until queue and grid are empty; returns all (rid, SampleOut)."""
         budget = max_rounds if max_rounds is not None else \
-            2 * (len(self.queue) + self.s) * (self.n + 1)  # 2x: preemption
+            2 * (len(self.queue) + self.max_slots) * (self.n + 1)  # 2x: preempt
         limit = self.round_count + budget  # relative: engines are long-lived
         served: list[tuple[int, SampleOut]] = []
         while len(self.queue) or self.has_inflight:
@@ -534,11 +602,10 @@ class ContinuousEngine:
             "served": served,
             "rounds_total": self.round_count,
             "throughput_req_per_round": served / rounds,
-            "occupancy": self._live_sum / (rounds * self.s),
+            "occupancy": self._live_sum / max(1, self._slot_rounds),
             "latency_rounds_p50": float(np.percentile(lat, 50)) if served else 0.0,
             "latency_rounds_p95": float(np.percentile(lat, 95)) if served else 0.0,
-            "mean_speedup": float(np.mean([o.speedup for _, o in self._served])
-                                  ) if served else 0.0,
+            "mean_speedup": float(np.mean(self._speedups)) if served else 0.0,
             "policy": self.policy.name,
             "host_syncs": self.host_syncs,
             "deadline_total": self._deadline_total,
@@ -547,4 +614,20 @@ class ContinuousEngine:
             if self._deadline_total else 0.0,
             "preemptions": self._preempt_count,
             "preempted_rounds_wasted": self._preempt_rounds_wasted,
+            # elastic-capacity accounting
+            "num_slots": self.s,
+            "min_slots": self.min_slots,
+            "max_slots": self.max_slots,
+            "wasted_slot_rounds": self._wasted_sum,
+            "resizes": self._resizes,
+            "grows": self._grow_count,
+            "shrinks": self._shrink_count,
+            "resize_vetoes": self._resize_vetoes,
+            "migrations": self._migrations,
+            "buckets_visited": sorted(self._buckets_visited),
+            "retraces": self.executor.retraces,
+            "migration_traces": self.executor.migration_traces,
+            # observed accept rounds (EMA per (i_seq, rtol) — feeds the cost
+            # model's calibrated predictions; see sched/README.md)
+            "accept_rounds_observed": self.cost.accept_table_json(),
         }

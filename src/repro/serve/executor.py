@@ -1,0 +1,388 @@
+"""Unified round-executor layer: one compile path for every serve engine.
+
+Before this module, the slot-round / admission / multi-round / streaming
+programs were compiled in three private places (``StreamingSampler._run``,
+``ChordsEngine`` via its sampler, and ``ContinuousEngine._round_fn`` /
+``_admit_fn`` / ``_multi_round_fn``), each hard-coding one grid shape. The
+:class:`RoundExecutor` owns all of them now:
+
+* a :class:`GridSpec` names a slot grid — (S, K, latent shape, dtype,
+  sharding tag, device-rounds hint) — and is the *key* of a bounded LRU
+  trace cache: the first time a spec is requested its program set (round,
+  admit, multi-round, fresh state) is built from
+  ``core.chords.make_slot_round_body`` and jitted (**one retrace, counted**);
+  every later request for the same spec is a cache hit, including re-entry
+  after other specs were used in between (no thrash retraces — the elastic
+  engine relies on this when it bounces between capacity buckets);
+* a :class:`StreamSpec` keys the batch streaming-accept program
+  (``StreamingSampler``'s early-exit ``while_loop``) the same way;
+* ``migrate(src_spec, dst_spec)`` returns the lane-migration program — the
+  masked-gather :func:`repro.core.chords.gather_slots` over a full
+  :class:`SlotState` — that moves live lanes between grids of different S
+  during an elastic resize, copying every migrated lane's carry bit-exactly.
+
+``use_kernel=True`` builds every round body on the fused Pallas
+solver-step + rectification kernel (``repro.kernels.rectify``) instead of
+composed jnp ops; outputs are bitwise identical either way (parity test in
+``tests/test_executor.py``) — the kernel is a memory-traffic optimization,
+never a semantics change.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scheduler
+from repro.core.chords import (ChordsCarry, accept_test, bmask,
+                               chords_init_carry, gather_slots,
+                               make_round_body, make_slot_round_body,
+                               reset_slots, slot_init_carry)
+
+
+def ambient_sharding_tag() -> Optional[str]:
+    """Stable tag for the active ``use_sharding`` context (``None`` outside
+    one). Engines put it in their spec keys so programs traced under
+    different mesh contexts never alias a cache entry."""
+    from repro.dist.sharding import current_ctx
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    mesh = ctx.mesh
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return f"mesh={sorted(axes.items())};rules={sorted(ctx.rules.items())}"
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Hashable name of one slot grid — the trace-cache key.
+
+    ``sharding`` is an opaque tag for the ambient mesh context (programs
+    compiled under different ``use_sharding`` contexts must not share cache
+    entries); ``device_rounds`` is an optional static CAP on the multi-round
+    device loop — the compiled ``multi`` program never runs more than this
+    many rounds per host sync regardless of the traced budget it is called
+    with. ``None`` (the default, and what the engines pass) leaves the
+    budget fully traced so varying R never retraces.
+    """
+
+    num_slots: int
+    num_cores: int
+    latent_shape: Tuple[int, ...]
+    dtype: str = "float32"
+    sharding: Optional[str] = None
+    device_rounds: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "latent_shape", tuple(self.latent_shape))
+        if self.num_slots < 1 or self.num_cores < 1:
+            raise ValueError(f"need S >= 1 and K >= 1, got {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Trace-cache key for the batch streaming-accept program."""
+
+    num_cores: int
+    i_seq: Tuple[int, ...]
+    rtol: float
+    batched: bool = False
+    sharding: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "i_seq", tuple(int(i) for i in self.i_seq))
+
+
+class SlotState(NamedTuple):
+    """Device-side state of the continuous-batching slot grid (a pytree).
+
+    Every leaf leads with the slot axis — which is what lets
+    ``gather_slots`` migrate whole lanes between grids as pure row copies.
+    """
+
+    carry: ChordsCarry     # [S, K, ...] lockstep grid
+    i_arr: jax.Array       # [S, K] per-slot init sequence
+    rtol: jax.Array        # [S] per-slot accept tolerance
+    rounds: jax.Array      # [S] next lockstep round for each slot (1-based)
+    live: jax.Array        # [S] slot occupied and still iterating
+    done: jax.Array        # [S] converged, result buffered for drain
+    has_last: jax.Array    # [S] a previous streamed output exists
+    last_out: jax.Array    # [S, ...] latest streamed output per slot
+    result: jax.Array      # [S, ...] accepted output (valid where done)
+    rounds_used: jax.Array  # [S] lockstep rounds at accept
+    chosen: jax.Array      # [S] accepted core index
+
+
+class GridPrograms(NamedTuple):
+    """One GridSpec's compiled program set (all jitted, shared via cache)."""
+
+    spec: GridSpec
+    round: Callable      # (SlotState) -> SlotState
+    multi: Callable      # (SlotState, done0, max_rounds) -> (SlotState, ran)
+    admit: Callable      # (SlotState, mask, x0, i_arr, rtol) -> SlotState
+    init_state: Callable  # () -> SlotState (host-side, not compiled)
+
+
+def _build_grid(drift, tgrid, n: int, spec: GridSpec,
+                use_kernel: bool, kernel_interpret: bool) -> GridPrograms:
+    """Build + jit the slot-grid program set for one GridSpec."""
+    s, k = spec.num_slots, spec.num_cores
+    dtype = jnp.dtype(spec.dtype)
+    slot_round = make_slot_round_body(drift, tgrid, n, k,
+                                      use_kernel=use_kernel,
+                                      kernel_interpret=kernel_interpret)
+
+    def round_fn(st: SlotState) -> SlotState:
+        """One lockstep round for every live slot + per-slot accept test."""
+        active = st.live
+        carry, _ = slot_round(st.carry, st.i_arr, st.rounds, active)
+        emit = scheduler.emit_rounds_jnp(st.i_arr, n)  # [S, K]
+        r = st.rounds
+        hit = (emit == r[:, None]) & active[:, None]
+        any_emit = jnp.any(hit, axis=1)
+        ek = jnp.argmax(hit, axis=1).astype(jnp.int32)  # slowest emitter wins
+        out = carry.x[jnp.arange(s), ek]  # [S, ...]
+
+        ok = any_emit & st.has_last & accept_test(out, st.last_out, st.rtol, 1)
+        # core 0's emission is the exact sequential solve: force-accept it so
+        # no request outlives its own N rounds
+        final = any_emit & (r >= emit[:, 0])
+        acc = (ok | final) & active
+        result = jnp.where(bmask(acc, out), out, st.result)
+        return SlotState(
+            carry=carry,
+            i_arr=st.i_arr,
+            rtol=st.rtol,
+            rounds=jnp.where(active, r + 1, r),
+            live=st.live & ~acc,
+            done=st.done | acc,
+            has_last=st.has_last | any_emit,
+            last_out=jnp.where(bmask(any_emit, out), out, st.last_out),
+            result=result,
+            rounds_used=jnp.where(acc, r, st.rounds_used),
+            chosen=jnp.where(acc, ek, st.chosen),
+        )
+
+    def admit_fn(st: SlotState, mask, x0, i_arr, rtol) -> SlotState:
+        """Masked admission: reset lanes + per-slot accept state in place."""
+        carry = reset_slots(st.carry, mask, x0, i_arr)
+        m_lat = bmask(mask, st.last_out)
+        return SlotState(
+            carry=carry,
+            i_arr=jnp.where(mask[:, None], i_arr, st.i_arr),
+            rtol=jnp.where(mask, rtol, st.rtol),
+            rounds=jnp.where(mask, 1, st.rounds),
+            live=st.live | mask,
+            done=st.done & ~mask,
+            has_last=st.has_last & ~mask,
+            last_out=jnp.where(m_lat, 0.0, st.last_out),
+            result=jnp.where(m_lat, 0.0, st.result),
+            rounds_used=jnp.where(mask, 0, st.rounds_used),
+            chosen=jnp.where(mask, 0, st.chosen),
+        )
+
+    def multi_fn(st: SlotState, done0, max_rounds):
+        """Up to ``max_rounds`` lockstep rounds in ONE device program.
+
+        The ``lax.while_loop`` exits as soon as any slot's accept fires
+        (``done`` rises relative to ``done0``, the flags at entry — drained
+        slots keep their stale flag until re-admission, so the delta is
+        exactly "newly finished") or the round budget elapses. The host only
+        reads back afterwards: one sync amortized over up to R rounds.
+        ``max_rounds`` is a traced scalar, so varying R never retraces;
+        ``spec.device_rounds`` (when set) is a static per-grid cap on it.
+        """
+        if spec.device_rounds is not None:
+            max_rounds = jnp.minimum(max_rounds, spec.device_rounds)
+
+        def cond(c):
+            st_, i = c
+            return (i < max_rounds) & jnp.any(st_.live) \
+                & ~jnp.any(st_.done & ~done0)
+
+        def body(c):
+            st_, i = c
+            return round_fn(st_), i + 1
+
+        return jax.lax.while_loop(cond, body,
+                                  (st, jnp.asarray(0, jnp.int32)))
+
+    def init_state() -> SlotState:
+        lat = jnp.zeros((s,) + spec.latent_shape, dtype)
+        return SlotState(
+            carry=slot_init_carry(s, k, spec.latent_shape, dtype),
+            i_arr=jnp.zeros((s, k), jnp.int32),
+            rtol=jnp.zeros((s,), jnp.float32),
+            rounds=jnp.ones((s,), jnp.int32),
+            live=jnp.zeros((s,), bool),
+            done=jnp.zeros((s,), bool),
+            has_last=jnp.zeros((s,), bool),
+            last_out=lat, result=lat,
+            rounds_used=jnp.zeros((s,), jnp.int32),
+            chosen=jnp.zeros((s,), jnp.int32),
+        )
+
+    return GridPrograms(spec=spec, round=jax.jit(round_fn),
+                        multi=jax.jit(multi_fn), admit=jax.jit(admit_fn),
+                        init_state=init_state)
+
+
+def _build_stream(drift, tgrid, n: int, spec: StreamSpec,
+                  use_kernel: bool, kernel_interpret: bool) -> Callable:
+    """Build + jit the early-exit streaming program (StreamingSampler's)."""
+    i_arr = jnp.asarray(spec.i_seq, jnp.int32)
+    emit = jnp.asarray(scheduler.emit_rounds(list(spec.i_seq), n))
+    round_body = make_round_body(drift, tgrid, i_arr, n, spec.num_cores,
+                                 use_kernel=use_kernel,
+                                 kernel_interpret=kernel_interpret)
+    rtol, batched = spec.rtol, spec.batched
+    bdim = 1 if batched else 0
+
+    def run(x0, live):
+        def cond(state):
+            _, r, accepted = state[0], state[1], state[2]
+            return (~jnp.all(accepted)) & (r <= n)
+
+        def body(state):
+            (carry, r, accepted, last_out, has_last, chosen, rounds,
+             result) = state
+            carry, _ = round_body(carry, r)
+            emitted_k = jnp.argmax(emit == r)  # core emitting this round
+            any_emit = jnp.any(emit == r)
+            out = carry.x[emitted_k]
+            ok = any_emit & has_last & accept_test(out, last_out, rtol, bdim) \
+                & (~accepted)
+            result = jnp.where(bmask(ok, out), out, result)
+            rounds = jnp.where(ok, r, rounds)
+            chosen = jnp.where(ok, emitted_k, chosen)
+            accepted = accepted | ok
+            last_out = jnp.where(any_emit, out, last_out)
+            has_last = has_last | any_emit
+            return (carry, r + 1, accepted, last_out, has_last, chosen,
+                    rounds, result)
+
+        carry = chords_init_carry(x0, i_arr, spec.num_cores)
+        state = (carry, jnp.asarray(1),
+                 ~live, jnp.zeros_like(x0),
+                 jnp.asarray(False), jnp.zeros(live.shape, jnp.int32),
+                 jnp.zeros(live.shape, jnp.int32), jnp.zeros_like(x0))
+        (carry, r, accepted, last_out, _, chosen, rounds,
+         result) = jax.lax.while_loop(cond, body, state)
+        # requests that never early-exited take the final emission —
+        # core 0's full-round output, i.e. the sequential solve
+        fell_through = live & (rounds == 0)
+        result = jnp.where(bmask(fell_through, result), last_out, result)
+        rounds = jnp.where(fell_through, n, rounds)
+        return result, rounds, chosen
+
+    return jax.jit(run)
+
+
+class RoundExecutor:
+    """Owner of every compiled serve program, behind a keyed LRU trace cache.
+
+    One executor wraps one ``(drift, tgrid)`` pair; engines either build
+    their own or share one (sharing is what makes the trace-count
+    accounting meaningful across engines). ``retraces`` counts grid-spec
+    cache misses — the acceptance contract is *one per distinct GridSpec
+    ever touched*, cache hits thereafter (bucket re-entry is free);
+    ``stream_traces`` and ``migration_traces`` count the other two program
+    families the same way.
+    """
+
+    def __init__(self, drift: Callable, tgrid, n_steps: Optional[int] = None,
+                 use_kernel: bool = False, kernel_interpret: bool = True,
+                 max_entries: int = 8):
+        self.drift = drift
+        self.tgrid = tgrid
+        self.n = int(n_steps) if n_steps is not None \
+            else int(tgrid.shape[0]) - 1
+        if self.n != int(tgrid.shape[0]) - 1:
+            raise ValueError(
+                f"n_steps {self.n} != len(tgrid)-1 {int(tgrid.shape[0]) - 1}")
+        self.use_kernel = use_kernel
+        # True: the kernel executes as its jnp oracle (CPU; bitwise-neutral
+        # use_kernel). False: the real Pallas lowering (TPU targets).
+        self.kernel_interpret = kernel_interpret
+        self.max_entries = max(1, int(max_entries))
+        self._grids: "collections.OrderedDict[GridSpec, GridPrograms]" = \
+            collections.OrderedDict()
+        self._streams: "collections.OrderedDict[StreamSpec, Callable]" = \
+            collections.OrderedDict()
+        # one jitted gather serves every migration pair — jax's own cache
+        # keys it by shapes, so (S_src, S_dst) pairs each trace once
+        self._migrate = jax.jit(gather_slots)
+        self.retraces = 0          # grid-spec cache misses (compiles)
+        self.stream_traces = 0     # stream-spec cache misses
+
+    # -- caches ---------------------------------------------------------------
+
+    @staticmethod
+    def _lru_get(cache, key, build, max_entries):
+        hit = cache.get(key)
+        if hit is not None:
+            cache.move_to_end(key)
+            return hit, False
+        val = build()
+        cache[key] = val
+        while len(cache) > max_entries:
+            cache.popitem(last=False)
+        return val, True
+
+    def reserve_grid_capacity(self, n: int) -> None:
+        """Ensure the grid cache can take ``n`` more specs without evicting
+        resident ones. Engines call this with their bucket-ladder size, so
+        ladder re-entry can never evict-and-retrace — even when several
+        engines share one executor."""
+        self.max_entries = max(self.max_entries, len(self._grids) + int(n))
+
+    def grid(self, spec: GridSpec) -> GridPrograms:
+        """Program set for ``spec`` — compiled once, cache-hit thereafter."""
+        progs, missed = self._lru_get(
+            self._grids, spec,
+            lambda: _build_grid(self.drift, self.tgrid, self.n, spec,
+                                self.use_kernel, self.kernel_interpret),
+            self.max_entries)
+        self.retraces += missed
+        return progs
+
+    def stream(self, spec: StreamSpec) -> Callable:
+        """Jitted ``(x0, live) -> (result, rounds, chosen)`` early-exit
+        streaming program for ``spec``."""
+        fn, missed = self._lru_get(
+            self._streams, spec,
+            lambda: _build_stream(self.drift, self.tgrid, self.n, spec,
+                                  self.use_kernel, self.kernel_interpret),
+            self.max_entries)
+        self.stream_traces += missed
+        return fn
+
+    def migrate(self, src_spec: GridSpec, dst_spec: GridSpec) -> Callable:
+        """Jitted lane-migration program ``(dst_state, src_state, mask,
+        src_idx) -> SlotState`` between two grids (masked row gather — every
+        migrated lane's carry is copied bit-exactly)."""
+        if src_spec.num_cores != dst_spec.num_cores \
+                or src_spec.latent_shape != dst_spec.latent_shape \
+                or src_spec.dtype != dst_spec.dtype:
+            raise ValueError(
+                f"can only migrate lanes between grids differing in S: "
+                f"{src_spec} -> {dst_spec}")
+        return self._migrate
+
+    @property
+    def migration_traces(self) -> int:
+        """Distinct migration shapes traced (via jax's own jit cache)."""
+        probe = getattr(self._migrate, "_cache_size", None)
+        return int(probe()) if callable(probe) else 0
+
+    def stats(self) -> dict:
+        return {
+            "retraces": self.retraces,
+            "stream_traces": self.stream_traces,
+            "migration_traces": self.migration_traces,
+            "cached_grids": len(self._grids),
+            "cached_streams": len(self._streams),
+        }

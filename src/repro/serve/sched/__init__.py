@@ -11,5 +11,5 @@ from repro.serve.sched.cost import CostModel  # noqa: F401
 from repro.serve.sched.policy import (Admission, Decision, EdfPolicy,  # noqa: F401
                                       EdfPreemptPolicy, EngineView,
                                       FifoPolicy, LaneView, POLICIES, Policy,
-                                      get_policy)
+                                      Resize, ResizeProposal, get_policy)
 from repro.serve.sched.queue import AdmissionQueue, QueueItem  # noqa: F401

@@ -19,6 +19,13 @@ Prediction semantics (documented knob, not an oracle):
   0's exact sequential solve at round N), so prediction is the worst case
   ``emit_rounds[0] == N`` — deterministic, which is what the CI workload
   uses to make miss counts reproducible.
+* **Calibration**: the engine reports every observed accept round back via
+  ``observe_accept(i_seq, rtol, rounds)``; once a ``(i_seq, rtol)`` key has
+  observations, ``predict_rounds`` returns the EMA of the observed rounds
+  (clamped to the feasible emission window) instead of the fixed
+  ``accept_arrival`` heuristic. The heuristic remains the cold-start
+  default, and the ``rtol <= 0`` closed form is never overridden (it is
+  exact, and CI determinism relies on it).
 
 The ladder of candidate sequences is shared with the engine's priority
 table: level 0 is the paper preset/theorem default (``make_sequence(K, N)``),
@@ -41,12 +48,16 @@ class CostModel:
     """Host-side round predictions for one engine's (K, N) grid."""
 
     def __init__(self, num_cores: int, n_steps: int,
-                 priority_speedup: float = 1.25, accept_arrival: int = 2):
+                 priority_speedup: float = 1.25, accept_arrival: int = 2,
+                 ema_alpha: float = 0.25):
         self.k = num_cores
         self.n = n_steps
         self.priority_speedup = priority_speedup
         self.accept_arrival = accept_arrival
+        self.ema_alpha = ema_alpha
         self._ladder: List[List[int]] = []
+        # (i_seq tuple, rtol) -> [ema_rounds, observation_count]
+        self._accept_table: dict = {}
 
     # -- init-sequence ladder --------------------------------------------------
 
@@ -78,12 +89,51 @@ class CostModel:
 
     # -- predictions -----------------------------------------------------------
 
+    @staticmethod
+    def _accept_key(i_seq: Sequence[int], rtol: Optional[float]):
+        return (tuple(int(i) for i in i_seq),
+                None if rtol is None else float(rtol))
+
+    def observe_accept(self, i_seq: Optional[Sequence[int]],
+                       rtol: Optional[float], rounds: int) -> None:
+        """Feed one observed accept (lockstep rounds at which the streaming
+        test fired) into the EMA table for ``(i_seq, rtol)``.
+
+        ``rtol <= 0`` observations are discarded: that path is closed-form
+        exact (always ``N``) and the CI workloads rely on its determinism.
+        """
+        if i_seq is None or rtol is None or rtol <= 0.0:
+            return
+        key = self._accept_key(i_seq, rtol)
+        ent = self._accept_table.get(key)
+        if ent is None:
+            self._accept_table[key] = [float(rounds), 1]
+        else:
+            ent[0] = self.ema_alpha * rounds + (1 - self.ema_alpha) * ent[0]
+            ent[1] += 1
+
+    def accept_table_json(self) -> list:
+        """Observed-accept table as JSON-able records (for stats/artifacts)."""
+        return [{"i_seq": list(seq), "rtol": rtol,
+                 "ema_rounds": round(ent[0], 3), "observations": ent[1]}
+                for (seq, rtol), ent in sorted(self._accept_table.items())]
+
     def predict_rounds(self, i_seq: Sequence[int],
                        rtol: Optional[float] = None) -> int:
-        """Lockstep rounds until this sequence's assumed accept fires."""
+        """Lockstep rounds until this sequence's assumed accept fires.
+
+        Calibrated by the EMA of observed accepts for this exact
+        ``(i_seq, rtol)`` when available; the ``accept_arrival`` heuristic
+        is the cold-start default."""
         emit = scheduler.emit_rounds(list(i_seq), self.n)
         if rtol is not None and rtol <= 0.0:
             return int(emit[0])  # exact sequential fallback: worst case N
+        ent = self._accept_table.get(self._accept_key(i_seq, rtol))
+        if ent is not None:
+            # clamp to the feasible accept window: no earlier than the 2nd
+            # streamed arrival (the test needs two), no later than core 0
+            lo = int(emit[max(0, len(i_seq) - 2)])
+            return int(min(max(round(ent[0]), lo), int(emit[0])))
         idx = max(0, len(i_seq) - self.accept_arrival)
         return int(emit[idx])
 

@@ -22,6 +22,12 @@ any policy by construction.
   thrash and guarantees every request eventually runs to completion). The
   evicted request re-enters the queue with its executed rounds credited
   (``QueueItem.rounds_credit`` — pre-aged, so it is promoted, not punished).
+
+Alongside admissions/evictions, policies rule on **elastic capacity**: the
+demand-paged engine proposes grid resizes (:class:`ResizeProposal`) and the
+policy answers with a :class:`Resize` (approve) or ``None`` (veto). Growth
+is always approved; EDF-family policies veto a shrink that would push a
+queued deadline into a predicted miss (the freed lanes are load-bearing).
 """
 from __future__ import annotations
 
@@ -73,11 +79,45 @@ class Decision:
     # ``admissions`` in the same decision — eviction exists only to admit.
 
 
+@dataclasses.dataclass(frozen=True)
+class ResizeProposal:
+    """An engine's proposed capacity change on the bucket ladder.
+
+    Shrinks (``new_slots < current_slots``) are only ever proposed when the
+    live lanes fit the smaller grid — a resize migrates lanes, it never
+    evicts them — so what a policy weighs is *future* admission capacity:
+    would the queued work (deadlines included) still be servable with
+    ``new_slots - live_lanes`` free lanes?
+    """
+
+    current_slots: int
+    new_slots: int
+    live_lanes: int
+    queued: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Resize:
+    """Approved capacity-change decision (the elastic analog of
+    :class:`Decision`): the engine retargets the grid to ``new_slots`` and
+    migrates live lanes bit-exactly."""
+
+    new_slots: int
+
+
 class Policy:
     """Base policy == FIFO (the PR 3 default)."""
 
     name = "fifo"
     preemptive = False
+
+    def consider_resize(self, view: EngineView, proposal: ResizeProposal
+                        ) -> Optional[Resize]:
+        """Approve (return :class:`Resize`) or veto (``None``) a proposed
+        capacity change. Growth is always approved — more capacity cannot
+        hurt a deadline. The base (FIFO) policy approves shrinks too: with
+        no deadline semantics there is nothing a smaller grid can break."""
+        return Resize(proposal.new_slots)
 
     def _admission(self, view: EngineView, slot: int, item: QueueItem
                    ) -> Admission:
@@ -106,6 +146,33 @@ class FifoPolicy(Policy):
 
 class EdfPolicy(Policy):
     name = "edf"
+
+    def consider_resize(self, view: EngineView, proposal: ResizeProposal
+                        ) -> Optional[Resize]:
+        """Veto a shrink that would turn a *currently-feasible* queued
+        deadline into a predicted miss: for every queued item with a finite
+        deadline, re-run the admission feasibility check (cheapest meeting
+        sequence + predicted wait for a free lane) against the post-shrink
+        free capacity. Items already missing at the current capacity are
+        not the shrink's fault and never block it."""
+        if proposal.new_slots >= proposal.current_slots:
+            return Resize(proposal.new_slots)
+        free_now = proposal.current_slots - proposal.live_lanes
+        free_after = proposal.new_slots - proposal.live_lanes
+        remaining = [ln.est_remaining for ln in view.lanes]
+        wait_now = view.cost.wait_rounds(free_now, remaining)
+        wait_after = view.cost.wait_rounds(free_after, remaining)
+        for item in view.queue.ordered(view.now):
+            budget = item.deadline_round - view.now
+            if math.isinf(budget):
+                continue
+            _, need, _ = view.cost.pick_i_seq(
+                budget, min_level=max(0, item.priority), rtol=item.rtol)
+            if need + wait_now > budget:
+                continue  # missing either way: the shrink changes nothing
+            if need + wait_after > budget:
+                return None  # this lane capacity is load-bearing: keep it
+        return Resize(proposal.new_slots)
 
     def _pop(self, view: EngineView) -> Optional[QueueItem]:
         return view.queue.pop(view.now)

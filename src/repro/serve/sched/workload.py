@@ -1,9 +1,11 @@
-"""The staggered-arrival SLA demo workload + arrival-clock driver.
+"""Canonical serve workloads + the arrival-clock driver.
 
-One canonical trace shared by ``examples/serve_diffusion.py``,
-``benchmarks/run.py --serve-smoke``, CI, and the tests, so "edf-preempt
-misses strictly fewer deadlines than fifo" is asserted against the same
-workload everywhere.
+Two traces shared by ``examples/serve_diffusion.py``, ``benchmarks/run.py``
+(``--serve-smoke`` / ``--serve-burst``), CI, and the tests, so claims like
+"edf-preempt misses strictly fewer deadlines than fifo" and "elastic
+capacity strictly reduces wasted slot-rounds" are asserted against the same
+workload everywhere: :func:`sla_demo_trace` (deadline-pressure, below) and
+:func:`bursty_trace` (burst → lull → burst, the demand-paged capacity demo).
 
 Shape of the trace (all knobs scale with ``n_steps``):
 
@@ -69,6 +71,54 @@ def sla_demo_trace(n_steps: int, key_base: int = 1000,
         rid += 1
     reqs.sort(key=lambda ar: (ar[0], ar[1].rid))
     return [r for _, r in reqs], [a for a, _ in reqs]
+
+
+def bursty_trace(n_steps: int, key_base: int = 7000,
+                 burst: int = 6, quiet: int = 3,
+                 quiet_gap: Optional[int] = None,
+                 rtol: Optional[float] = 0.0
+                 ) -> Tuple[List[Request], List[int]]:
+    """The demand-paged capacity demo trace: burst → lull → burst.
+
+    * a **burst** of ``burst`` simultaneous requests at round 0 — far beyond
+      a small grid's capacity, so an elastic engine pages slots in (and a
+      fixed ``S = min_slots`` grid queues deeply: its p95 latency is the
+      bound elastic must beat);
+    * a **lull**: ``quiet`` requests arriving one at a time, ``quiet_gap``
+      rounds apart (default ``2 * n_steps`` — strictly more than one
+      request's compute, so occupancy stays at one lane) — a fixed
+      ``S = max_slots`` grid burns dead-lane rounds here, an elastic engine
+      pages slots out behind the hysteresis window;
+    * a second **burst** re-entering the top capacity bucket — which must be
+      a trace-cache HIT (no thrash retraces: total retraces stay bounded by
+      the number of *distinct* buckets ever visited).
+
+    With ``rtol=0.0`` every lane runs exactly ``n_steps`` rounds, making
+    wasted-round and latency comparisons deterministic for CI.
+    """
+    import jax  # deferred: keep this module importable host-only
+
+    n = n_steps
+    gap = quiet_gap if quiet_gap is not None else 2 * n
+    reqs: List[Request] = []
+    arrivals: List[int] = []
+    rid = 0
+
+    def add(arrival: int):
+        nonlocal rid
+        reqs.append(Request(rid=rid, key=jax.random.PRNGKey(key_base + rid),
+                            rtol=rtol))
+        arrivals.append(arrival)
+        rid += 1
+
+    for _ in range(burst):
+        add(0)
+    lull_start = 3 * n  # past the first burst's drain even at S = min
+    for j in range(quiet):
+        add(lull_start + j * gap)
+    for _ in range(burst):
+        add(lull_start + quiet * gap)
+    return reqs, arrivals
 
 
 def drive(engine: ContinuousEngine, reqs: List[Request],

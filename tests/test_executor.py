@@ -1,0 +1,357 @@
+"""Round-executor + demand-paged capacity invariants.
+
+The load-bearing ones:
+
+* **trace-cache discipline** — the executor compiles exactly once per
+  distinct GridSpec/StreamSpec; bucket re-entry over a grow→shrink→grow
+  bursty trace is a cache hit (retraces == distinct buckets visited, no
+  thrash), and the static engines still trace exactly once post-refactor;
+* **kernel parity** — ``use_kernel=True`` (fused Pallas step+rectify in the
+  round body, interpret mode on CPU) is bitwise identical to the
+  ``core.rectify.rectify_delta`` jnp path, in both the slot engine and the
+  streaming sampler;
+* **elastic capacity changes scheduling, never results** — outputs on the
+  bursty trace are bitwise identical to the fixed-S run (including migrated
+  lanes: ``gather_slots`` is a pure row copy), wasted slot-rounds strictly
+  drop vs fixed ``S = max_slots``, p95 latency is no worse than fixed
+  ``S = min_slots``, and ``min_slots == max_slots`` is bit-for-bit the
+  fixed-S engine with zero resizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler, uniform_tgrid
+from repro.core.chords import gather_slots, slot_init_carry
+from repro.serve import (ChordsEngine, ContinuousEngine, GridSpec, Request,
+                         RoundExecutor, StreamingSampler, StreamSpec,
+                         bucket_ladder)
+from repro.serve.sched.workload import bursty_trace, drive
+
+N, K = 12, 4
+LAM = jnp.linspace(0.1, 1.5, 4)
+TG = uniform_tgrid(N, 0.98)
+
+
+def _drift(x, t):
+    return -x * LAM
+
+
+def _engine(**kw):
+    kw.setdefault("rtol", 0.3)
+    return ContinuousEngine(_drift, latent_shape=(4,), n_steps=N,
+                            num_cores=K, tgrid=TG, **kw)
+
+
+# --- trace cache ------------------------------------------------------------
+
+def test_one_retrace_per_distinct_gridspec():
+    ex = RoundExecutor(_drift, TG, N)
+    a = GridSpec(num_slots=2, num_cores=K, latent_shape=(4,))
+    b = GridSpec(num_slots=4, num_cores=K, latent_shape=(4,))
+    p1 = ex.grid(a)
+    assert ex.retraces == 1
+    assert ex.grid(a) is p1          # same spec: cache hit
+    ex.grid(b)
+    assert ex.retraces == 2
+    assert ex.grid(a) is p1          # re-entry after another spec: still hit
+    assert ex.retraces == 2
+    # equal-by-value specs are the same key (GridSpec is the cache key)
+    assert ex.grid(GridSpec(num_slots=2, num_cores=K,
+                            latent_shape=(4,))) is p1
+    assert ex.retraces == 2
+
+
+def test_lru_bound_evicts_and_recompiles():
+    ex = RoundExecutor(_drift, TG, N, max_entries=2)
+    specs = [GridSpec(num_slots=s, num_cores=K, latent_shape=(4,))
+             for s in (1, 2, 4)]
+    for sp in specs:
+        ex.grid(sp)
+    assert ex.retraces == 3
+    ex.grid(specs[0])  # evicted by the bound: one extra (documented) retrace
+    assert ex.retraces == 4
+
+
+def test_bursty_trace_retraces_bounded_by_buckets_visited():
+    """grow→shrink→grow: bucket re-entry must be a cache hit (no thrash)."""
+    eng = _engine(min_slots=1, max_slots=4, resize_hysteresis=4, rtol=0.0)
+    reqs, arrivals = bursty_trace(N, burst=4, quiet=2)
+    out = drive(eng, reqs, arrivals)
+    st = eng.stats()
+    assert len(out) == len(reqs)
+    assert st["grows"] >= 2 and st["shrinks"] >= 1, st  # both directions ran
+    assert set(st["buckets_visited"]) == {1, 2, 4}
+    # THE discipline contract: one compile per distinct bucket, ever
+    assert st["retraces"] == len(st["buckets_visited"]), st
+    assert eng.executor.migration_traces <= 2 * len(st["buckets_visited"])
+
+
+def test_static_engines_trace_once_post_refactor():
+    eng = ChordsEngine(_drift, latent_shape=(4,), n_steps=N, num_cores=K,
+                       tgrid=TG, max_batch=4, rtol=0.3)
+    done = []
+    for batch in (3, 4, 1):
+        for i in range(batch):
+            eng.submit(Request(rid=len(done) + i, key=jax.random.PRNGKey(i)))
+        done += eng.step()
+    assert len(done) == 8
+    assert eng.sampler.num_traces == 1
+    assert eng.executor.stream_traces == 1
+    # a sampler with the same StreamSpec on the SAME executor is a cache hit
+    s2 = StreamingSampler(_drift, N, K, TG, rtol=0.3, batched=True,
+                          executor=eng.executor)
+    assert s2._jitted is eng.sampler._jitted
+    assert eng.executor.stream_traces == 1
+    # a different rtol is a different program (new key, one more trace)
+    StreamingSampler(_drift, N, K, TG, rtol=0.1, batched=True,
+                     executor=eng.executor)
+    assert eng.executor.stream_traces == 2
+
+
+def test_engines_share_one_executor_and_grid_cache():
+    ex = RoundExecutor(_drift, TG, N)
+    e1 = _engine(num_slots=2, executor=ex)
+    e2 = _engine(num_slots=2, executor=ex)  # same spec: shared programs
+    assert e1._prog is e2._prog
+    assert ex.retraces == 1
+
+
+# --- fused-kernel parity (satellite) ----------------------------------------
+
+def test_kernel_path_bitwise_parity():
+    """use_kernel routes the fused Pallas step+rectify kernel into the round
+    body; outputs must be BITWISE the jnp rectify_delta path's (the kernel
+    and the round step share the exact float association)."""
+    outs = {}
+    for uk in (False, True):
+        eng = _engine(num_slots=2, use_kernel=uk)
+        for i in range(5):  # 5 through 2 slots: recycling under the kernel
+            eng.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i)))
+        outs[uk] = dict(eng.run_until_drained())
+    for rid in outs[False]:
+        a, b = outs[False][rid], outs[True][rid]
+        np.testing.assert_array_equal(np.asarray(a.sample),
+                                      np.asarray(b.sample), err_msg=str(rid))
+        assert a.rounds_used == b.rounds_used
+        assert a.accepted_core == b.accepted_core
+
+
+def test_kernel_path_bitwise_parity_streaming_sampler():
+    x0 = jax.random.normal(jax.random.PRNGKey(7), (3, 4))
+    a = StreamingSampler(_drift, N, K, TG, rtol=0.3, batched=True).sample(x0)
+    b = StreamingSampler(_drift, N, K, TG, rtol=0.3, batched=True,
+                         use_kernel=True).sample(x0)
+    np.testing.assert_array_equal(np.asarray(a.sample), np.asarray(b.sample))
+    np.testing.assert_array_equal(a.rounds_used, b.rounds_used)
+
+
+# --- lane migration ---------------------------------------------------------
+
+def test_gather_slots_is_a_bit_exact_row_copy():
+    src = slot_init_carry(2, K, (3,))
+    src = src._replace(
+        x=jax.random.normal(jax.random.PRNGKey(0), src.x.shape),
+        f_snap=jax.random.normal(jax.random.PRNGKey(1), src.f_snap.shape),
+        p=jnp.arange(2 * K, dtype=jnp.int32).reshape(2, K))
+    dst = slot_init_carry(4, K, (3,))
+    mask = jnp.asarray([True, True, False, False])
+    idx = jnp.asarray([1, 0, 0, 0], jnp.int32)
+    out = gather_slots(dst, src, mask, idx)
+    for leaf_out, leaf_src, leaf_dst in zip(out, src, dst):
+        np.testing.assert_array_equal(np.asarray(leaf_out[0]),
+                                      np.asarray(leaf_src[1]))
+        np.testing.assert_array_equal(np.asarray(leaf_out[1]),
+                                      np.asarray(leaf_src[0]))
+        np.testing.assert_array_equal(np.asarray(leaf_out[2:]),
+                                      np.asarray(leaf_dst[2:]))
+
+
+def test_bucket_ladder():
+    assert bucket_ladder(1, 8) == [1, 2, 4, 8]
+    assert bucket_ladder(2, 12) == [2, 4, 8, 12]  # top clamps off-ladder
+    assert bucket_ladder(3, 3) == [3]
+
+
+# --- elastic capacity contract ----------------------------------------------
+
+def _run_bursty(**kw):
+    eng = _engine(rtol=0.0, **kw)
+    reqs, arrivals = bursty_trace(N, burst=4, quiet=2)
+    out = drive(eng, reqs, arrivals)
+    return eng, out, eng.stats()
+
+
+def test_elastic_contract_vs_fixed_grids():
+    """The ISSUE 5 acceptance regression: fewer wasted slot-rounds than
+    fixed S=max, p95 no worse than fixed S=min, outputs bitwise identical
+    to the fixed-S run (asserted for ALL requests — migration is bit-exact
+    — which subsumes the required non-migrated subset)."""
+    el, e_out, e_st = _run_bursty(min_slots=1, max_slots=4,
+                                  resize_hysteresis=4)
+    _, fmax_out, fmax_st = _run_bursty(num_slots=4)
+    _, fmin_out, fmin_st = _run_bursty(num_slots=1)
+    assert e_st["wasted_slot_rounds"] < fmax_st["wasted_slot_rounds"], \
+        (e_st["wasted_slot_rounds"], fmax_st["wasted_slot_rounds"])
+    assert e_st["latency_rounds_p95"] <= fmin_st["latency_rounds_p95"], \
+        (e_st["latency_rounds_p95"], fmin_st["latency_rounds_p95"])
+    assert e_st["retraces"] <= len(e_st["buckets_visited"])
+    assert len(el.migrated_rids) > 0  # the trace must exercise migration
+    for rid in fmax_out:
+        np.testing.assert_array_equal(
+            np.asarray(e_out[rid].sample), np.asarray(fmax_out[rid].sample),
+            err_msg=f"rid {rid} (migrated={rid in el.migrated_rids})")
+        assert e_out[rid].rounds_used == fmax_out[rid].rounds_used
+
+
+def test_min_equals_max_is_fixed_s_bit_for_bit():
+    """min_slots == max_slots must disable every resize path: identical
+    outputs, schedule, and stats vs the plain fixed-S engine."""
+    runs = {}
+    for label, kw in (("fixed", dict(num_slots=2)),
+                      ("pinned", dict(min_slots=2, max_slots=2))):
+        eng = _engine(**kw)
+        for i in range(5):
+            eng.submit(Request(rid=i, key=jax.random.PRNGKey(500 + i)))
+        runs[label] = (dict(eng.run_until_drained()), eng.stats())
+    out_f, st_f = runs["fixed"]
+    out_p, st_p = runs["pinned"]
+    assert st_p["resizes"] == 0 and st_p["migrations"] == 0
+    assert st_f["rounds_total"] == st_p["rounds_total"]
+    assert st_f["wasted_slot_rounds"] == st_p["wasted_slot_rounds"]
+    for rid in out_f:
+        np.testing.assert_array_equal(np.asarray(out_f[rid].sample),
+                                      np.asarray(out_p[rid].sample))
+
+
+def test_migrated_lane_equals_fresh_engine():
+    """A request whose lane crosses a grow AND a shrink mid-flight is still
+    bitwise the fresh-engine output."""
+    eng = _engine(min_slots=1, max_slots=4, resize_hysteresis=2, rtol=0.0)
+    # rid 0 alone (admitted at S=1), then a burst forces a grow while rid 0
+    # is mid-flight; the drain of the burst + hysteresis shrinks it back
+    eng.submit(Request(rid=0, key=jax.random.PRNGKey(900), rtol=0.0))
+    eng.step()
+    for i in range(1, 4):
+        eng.submit(Request(rid=i, key=jax.random.PRNGKey(900 + i), rtol=0.3))
+    out = dict(eng.run_until_drained())
+    assert 0 in eng.migrated_rids
+    fresh = _engine(num_slots=1, rtol=0.0)
+    fresh.submit(Request(rid=0, key=jax.random.PRNGKey(900), rtol=0.0))
+    [(_, ref)] = fresh.run_until_drained()
+    np.testing.assert_array_equal(np.asarray(out[0].sample),
+                                  np.asarray(ref.sample))
+    assert out[0].rounds_used == ref.rounds_used == N  # rtol=0: exact solve
+
+
+def test_idle_engine_pages_slots_out():
+    """A drained elastic engine keeps stepping toward min_slots: idle steps
+    count toward the shrink hysteresis (no live grid state should pin HBM
+    at the burst-size bucket forever)."""
+    eng = _engine(min_slots=1, max_slots=4, resize_hysteresis=3, rtol=0.0)
+    for i in range(4):
+        eng.submit(Request(rid=i, key=jax.random.PRNGKey(800 + i),
+                           rtol=0.0))
+    eng.run_until_drained()
+    assert eng.s == 4  # grew for the burst, drained before shrinking
+    for _ in range(3 * eng.resize_hysteresis):  # idle serving loop
+        assert eng.step() == []
+    assert eng.s == 1, eng.stats()
+
+
+def test_explicit_use_kernel_conflicting_with_executor_raises():
+    ex = RoundExecutor(_drift, TG, N, use_kernel=False)
+    try:
+        ContinuousEngine(_drift, latent_shape=(4,), n_steps=N, num_cores=K,
+                         tgrid=TG, executor=ex, use_kernel=True)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass
+    # None (the default) inherits the executor's setting, no conflict
+    eng = ContinuousEngine(_drift, latent_shape=(4,), n_steps=N,
+                           num_cores=K, tgrid=TG, executor=ex)
+    assert eng.executor is ex
+
+
+def test_edf_policy_vetoes_deadline_endangering_shrink():
+    """EDF vetoes a shrink whose post-shrink free capacity would turn a
+    queued, currently-feasible deadline into a predicted miss; FIFO (no
+    deadline semantics) approves, and growth is always approved."""
+    from repro.serve.sched import (AdmissionQueue, CostModel, EdfPolicy,
+                                   FifoPolicy)
+    from repro.serve.sched.policy import (EngineView, LaneView,
+                                          ResizeProposal)
+    cm = CostModel(4, 50)
+    need = cm.predict_rounds(cm.seq_for_level(0), rtol=0.3)
+    lane_item = AdmissionQueue().submit(payload="bulk", priority=0,
+                                        submit_round=0)
+    lanes = [LaneView(slot=0, item=lane_item, rounds_done=30,
+                      est_remaining=20)]
+
+    def view(deadline):
+        q = AdmissionQueue()
+        q.submit(payload="u", priority=0, submit_round=0,
+                 deadline_rounds=deadline, rtol=0.3)
+        return EngineView(now=0, queue=q, free_slots=[1], lanes=lanes,
+                          cost=cm)
+
+    shrink = ResizeProposal(current_slots=2, new_slots=1, live_lanes=1,
+                            queued=1)
+    # tight deadline: feasible now (free lane exists) but not after the
+    # shrink (0 free lanes => wait 20 rounds) -> veto
+    assert EdfPolicy().consider_resize(view(need + 5), shrink) is None
+    assert FifoPolicy().consider_resize(view(need + 5), shrink) is not None
+    # comfortable deadline absorbs the post-shrink wait -> approved
+    assert EdfPolicy().consider_resize(view(need + 100), shrink) is not None
+    grow = ResizeProposal(current_slots=1, new_slots=2, live_lanes=1,
+                          queued=1)
+    assert EdfPolicy().consider_resize(view(need + 5), grow).new_slots == 2
+
+
+def test_engine_counts_and_respects_resize_veto():
+    """A policy veto must keep the grid at its current bucket, be counted
+    in stats, and be re-asked only after a fresh hysteresis window."""
+    eng = _engine(min_slots=1, max_slots=2, resize_hysteresis=2, rtol=0.0)
+    proposals = []
+    eng.policy.consider_resize = \
+        lambda view, prop: proposals.append(prop) or None  # veto everything
+    eng.submit(Request(rid=0, key=jax.random.PRNGKey(700), rtol=0.0))
+    eng.submit(Request(rid=1, key=jax.random.PRNGKey(701), rtol=0.5))
+    out = dict(eng.run_until_drained())
+    assert len(out) == 2
+    st = eng.stats()
+    # rid 1's early exit leaves rid 0 alone on the 2-slot grid long enough
+    # to trip the hysteresis, so a shrink was proposed — and vetoed
+    assert st["resize_vetoes"] >= 1 and proposals
+    assert all(p.new_slots == 1 and p.current_slots == 2 for p in proposals)
+    assert st["shrinks"] == 0 and st["num_slots"] == 2
+
+
+def test_accept_calibration_feeds_engine_stats():
+    """Observed accept rounds land in stats() and calibrate the cost model:
+    after serving, predict_rounds reflects the observed EMA instead of the
+    2nd-arrival heuristic (which remains the cold-start default)."""
+    eng = _engine(num_slots=2, rtol=0.3)
+    for i in range(6):
+        eng.submit(Request(rid=i, key=jax.random.PRNGKey(300 + i)))
+    served = dict(eng.run_until_drained())
+    table = eng.stats()["accept_rounds_observed"]
+    assert len(table) == 1  # one (i_seq, rtol) combination in this workload
+    ent = table[0]
+    rounds = [o.rounds_used for o in served.values()]
+    assert ent["observations"] == 6
+    assert min(rounds) <= ent["ema_rounds"] <= max(rounds)
+    seq = eng.cost.seq_for_level(0)
+    assert ent["i_seq"] == seq and ent["rtol"] == 0.3
+    # the calibrated prediction IS the clamped EMA, not the heuristic
+    emit = scheduler.emit_rounds(seq, N)
+    want = int(min(max(round(ent["ema_rounds"]), emit[len(seq) - 2]),
+                   emit[0]))
+    assert eng.cost.predict_rounds(seq, 0.3) == want
+    # cold start (no observations) stays on the 2nd-arrival heuristic
+    cold = ContinuousEngine(_drift, latent_shape=(4,), n_steps=N,
+                            num_cores=K, tgrid=TG).cost
+    assert cold.predict_rounds(seq, 0.3) == emit[len(seq) - 2]
+    # rtol=0 stays closed-form exact regardless of observations
+    eng.cost.observe_accept(seq, 0.0, 3)  # discarded by design
+    assert eng.cost.predict_rounds(seq, 0.0) == N
