@@ -6,11 +6,10 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import GaussianMixture, sequential_sample, uniform_tgrid
+from repro.core import GaussianMixture, uniform_tgrid
 
 RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                            "results")

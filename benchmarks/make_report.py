@@ -4,11 +4,9 @@ Usage: PYTHONPATH=src:. python -m benchmarks.make_report > results/report.md
 """
 from __future__ import annotations
 
-import glob
 import json
-import os
 
-from benchmarks.roofline import RESULTS, fraction_of_roofline, load_cells
+from benchmarks.roofline import fraction_of_roofline, load_cells
 
 GIB = 1 << 30
 

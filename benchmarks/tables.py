@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import json
 
-import jax
 import numpy as np
 
 from benchmarks.common import (RESULTS_DIR, emit, image_problem, latent_rmse,
@@ -99,7 +98,6 @@ def table1b_micro_dit(cores=(4, 8)):
 
 def table3_init_ablation(cores=(4, 6, 8)):
     """Ours vs uniform at the SAME fastest-core slot i_K (same speedup)."""
-    from repro.core import uniform_sequence
     drift, x0, tg = video_problem()
     n = int(tg.shape[0]) - 1
     seq = sequential_sample(drift, x0, tg)

@@ -12,7 +12,6 @@ import os
 import tempfile
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

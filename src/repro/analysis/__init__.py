@@ -1,0 +1,52 @@
+"""Static analysis for the serve surface: four passes, one report.
+
+``python -m repro.analysis`` lints every program the serve engines can
+compile (the full bucket ladder + streaming + migration, via
+``RoundExecutor.enumerate_programs``) and the four Pallas kernel launches:
+
+* ``jaxpr_lint``     — host syncs, dtype promotion, dead code, carry drift
+* ``pallas_check``   — write-write races, OOB blocks, VMEM budget, oracle
+                       shape/dtype agreement
+* ``sharding_check`` — entry PartitionSpecs + accidental replication
+                       (needs a multi-device mesh; see ``--devices``)
+* ``trace_check``    — re-trace twice per spec, diff jaxpr fingerprints
+
+Findings aggregate into one :class:`Report`; anything not suppressed by
+the checked-in ``baseline.json`` fails the gate. See README.md here for
+the pass inventory and the triage/suppression workflow.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis.report import Baseline, Finding, Report  # noqa: F401
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def run_all(vmem_budget_bytes: int = None, sharding: bool = True,
+            executor=None) -> Report:
+    """Run every pass over the shared serve surface (``surface.py``)."""
+    from repro.analysis import (jaxpr_lint, pallas_check, sharding_check,
+                                surface, trace_check)
+
+    budget = (pallas_check.VMEM_BUDGET_BYTES if vmem_budget_bytes is None
+              else int(vmem_budget_bytes))
+    ex = surface.make_executor() if executor is None else executor
+    records = surface.enumerate_serve_programs(ex)
+    cases = surface.kernel_cases()
+
+    report = Report(meta={
+        "programs": [r.name for r in records],
+        "kernels": [c.name for c in cases],
+        "vmem_budget_bytes": budget,
+    })
+    report.extend(jaxpr_lint.run(records))
+    report.extend(trace_check.run(records))
+    for case in cases:
+        report.extend(pallas_check.check_launch(case.launch, budget))
+        report.extend(pallas_check.check_oracle(
+            case.name, case.op, case.ref, case.op_args, case.ref_args))
+    if sharding:
+        report.extend(sharding_check.run(ex, surface.grid_ladder()))
+    return report

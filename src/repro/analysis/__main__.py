@@ -1,0 +1,90 @@
+"""CLI: lint the serve surface, write the report, gate on the baseline.
+
+Exit code 1 iff any finding is not suppressed by the baseline (with
+``--fail-on-new``; without it the run is informational). ``--devices``
+forces a multi-device host platform so the sharding pass can build its
+mesh — it must be handled BEFORE jax is imported, which is why this
+module parses argv before touching any jax-importing code.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis over the CHORDS serve surface.")
+    p.add_argument("--out", default="results/analysis_report.json",
+                   help="report path (default: %(default)s)")
+    p.add_argument("--baseline", default=None,
+                   help="suppression baseline (default: the checked-in "
+                        "src/repro/analysis/baseline.json)")
+    p.add_argument("--fail-on-new", action="store_true",
+                   help="exit 1 on any finding not in the baseline")
+    p.add_argument("--update-baseline", metavar="JUSTIFICATION",
+                   help="rewrite the baseline from this run's findings, "
+                        "tagging NEW entries with the given justification "
+                        "(existing justifications are kept)")
+    p.add_argument("--vmem-budget-mb", type=float, default=16.0,
+                   help="per-core VMEM budget for the pallas pass "
+                        "(default: %(default)s)")
+    p.add_argument("--devices", type=int, default=4,
+                   help="force this many host devices for the sharding "
+                        "pass (default: %(default)s; ignored if jax is "
+                        "already imported)")
+    p.add_argument("--no-sharding", action="store_true",
+                   help="skip the sharding pass (single-device quick run)")
+    args = p.parse_args(argv)
+
+    if args.devices > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    from repro.analysis import BASELINE_PATH, Baseline, run_all
+    from repro.analysis.report import SEVERITIES
+
+    baseline_path = args.baseline or BASELINE_PATH
+    baseline = Baseline.load(baseline_path)
+    report = run_all(
+        vmem_budget_bytes=int(args.vmem_budget_mb * 1024 * 1024),
+        sharding=not args.no_sharding)
+    doc = report.write(args.out, baseline)
+    new = report.new_findings(baseline)
+
+    counts = " ".join(f"{s}={doc['counts'][s]}" for s in SEVERITIES)
+    print(f"repro.analysis: {len(report.meta['programs'])} programs, "
+          f"{len(report.meta['kernels'])} kernels -> "
+          f"{len(report.findings)} finding(s) [{counts}], "
+          f"{len(new)} new vs baseline ({len(baseline.keys)} suppressed)")
+    stale = doc.get("baseline", {}).get("stale_entries", [])
+    if stale:
+        print(f"  note: {len(stale)} stale baseline entr(ies) no longer "
+              f"produced: {', '.join(stale)}")
+    for f in new:
+        print(f"  NEW [{f.severity}] {f.key}: {f.message}")
+    print(f"report: {args.out}")
+
+    if args.update_baseline:
+        keep = {e["key"]: e["justification"] for e in baseline.entries}
+        entries = [{"key": f.key,
+                    "justification": keep.get(f.key, args.update_baseline)}
+                   for f in report.findings]
+        Baseline(keys={e["key"] for e in entries},
+                 entries=entries).write(baseline_path)
+        print(f"baseline rewritten: {baseline_path} "
+              f"({len(entries)} entries)")
+        return 0
+
+    if args.fail_on_new and new:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,202 @@
+"""Jaxpr lint pass: host syncs, dtype promotion, dead code, carry drift.
+
+Walks the closed jaxpr of every program the :class:`RoundExecutor` can
+build (round / admit / multi / stream / migrate — see
+``RoundExecutor.enumerate_programs``) plus any extra callables, recursing
+into sub-jaxprs (``while``/``scan``/``cond``/``pjit``), and flags:
+
+* ``host-sync``    — callback primitives that force a device→host round
+                     trip inside a compiled program (error).
+* ``const-capture``— closure-captured device/numpy arrays above a size
+                     threshold: each call re-uploads them (info).
+* ``dtype-64``     — any 64-bit-wide intermediate in a program whose
+                     inputs are all ≤32-bit (error): an f64 / i64 / c128
+                     sneaking into an f32 graph doubles bandwidth and
+                     breaks bitwise-identity contracts across backends.
+* ``weak-widen``   — a weakly-typed (python-scalar) operand being widened
+                     to a larger dtype, the classic silent-promotion
+                     pattern (warning).
+* ``carry-drift``  — ``while``/``scan`` body carry avals not matching the
+                     carry inputs in shape/dtype/weak-type (error).
+* ``dead-code``    — equations whose outputs never reach a program output
+                     (``jax.make_jaxpr`` does not DCE, so dropped values
+                     show up here) (warning).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+from repro.analysis.report import Finding
+
+PASS = "jaxpr"
+
+# Primitives that round-trip through the host when hit inside a compiled
+# program. debug_print/debug_callback are async on real backends but still
+# serialize through the host callback machinery, so they count.
+HOST_SYNC_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "host_callback_call", "outside_call", "infeed", "outfeed",
+})
+
+CONST_CAPTURE_BYTES = 1 << 10  # 1 KiB — below this, a baked const is noise
+
+_WIDE = frozenset({"float64", "int64", "uint64", "complex128"})
+
+
+def _iter_subjaxprs(eqn):
+    """Yield (name, jaxpr) for every sub-jaxpr in an equation's params."""
+    for k, v in eqn.params.items():
+        vals = v if isinstance(v, (list, tuple)) else [v]
+        for sub in vals:
+            j = getattr(sub, "jaxpr", None)  # ClosedJaxpr
+            if j is not None and hasattr(j, "eqns"):
+                yield k, j
+            elif hasattr(sub, "eqns"):  # bare Jaxpr
+                yield k, sub
+
+
+def _walk_eqns(jaxpr):
+    """Depth-first over all equations, including nested sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for _, sub in _iter_subjaxprs(eqn):
+            yield from _walk_eqns(sub)
+
+
+def _aval_of(atom):
+    return getattr(atom, "aval", None)
+
+
+def _check_carry(name: str, eqn, findings: List[Finding], loc: str) -> None:
+    prim = eqn.primitive.name
+    if prim == "while":
+        body = eqn.params["body_jaxpr"].jaxpr
+        nconsts = eqn.params["body_nconsts"]
+        carry_in = [v.aval for v in body.invars[nconsts:]]
+        carry_out = [v.aval for v in body.outvars]
+    elif prim == "scan":
+        body = eqn.params["jaxpr"].jaxpr
+        nconsts = eqn.params["num_consts"]
+        ncarry = eqn.params["num_carry"]
+        carry_in = [v.aval for v in body.invars[nconsts:nconsts + ncarry]]
+        carry_out = [_aval_of(v) for v in body.outvars[:ncarry]]
+    else:
+        return
+    for i, (a, b) in enumerate(zip(carry_in, carry_out)):
+        if b is None:
+            continue
+        drift = (a.shape != b.shape or a.dtype != b.dtype
+                 or getattr(a, "weak_type", False)
+                 != getattr(b, "weak_type", False))
+        if drift:
+            findings.append(Finding(
+                PASS, "carry-drift", "error", f"{loc}:{prim}",
+                f"{name}: {prim} carry[{i}] drifts {a.str_short()} -> "
+                f"{b.str_short()}: the loop re-converts every iteration"))
+
+
+def _live_eqns(jaxpr) -> set:
+    """Indices of equations whose outputs (transitively) feed jaxpr outvars.
+
+    Classic backward DCE sweep; equations with effects (callbacks etc.)
+    are pinned live so host-sync findings stay the host-sync pass's job.
+    """
+    needed = {v for v in jaxpr.outvars if hasattr(v, "count")}
+    live = set()
+    for idx in range(len(jaxpr.eqns) - 1, -1, -1):
+        eqn = jaxpr.eqns[idx]
+        pinned = (bool(getattr(eqn, "effects", ()))
+                  or eqn.primitive.name in HOST_SYNC_PRIMITIVES)
+        if pinned or any(v in needed for v in eqn.outvars):
+            live.add(idx)
+            needed.update(v for v in eqn.invars if hasattr(v, "count"))
+    return live
+
+
+def lint_jaxpr(name: str, closed_jaxpr) -> List[Finding]:
+    """Lint one closed jaxpr; ``name`` anchors finding locations/keys."""
+    findings: List[Finding] = []
+    jaxpr = closed_jaxpr.jaxpr
+
+    inputs_wide = any(str(v.aval.dtype) in _WIDE for v in jaxpr.invars)
+
+    # --- closure-captured consts -------------------------------------
+    for c in closed_jaxpr.consts:
+        nbytes = getattr(c, "nbytes", None)
+        if nbytes is None and isinstance(c, (np.ndarray, np.generic)):
+            nbytes = c.nbytes
+        if nbytes is not None and nbytes >= CONST_CAPTURE_BYTES:
+            shape = tuple(getattr(c, "shape", ()))
+            findings.append(Finding(
+                PASS, "const-capture", "info",
+                f"{name}:const{shape}",
+                f"{name}: closure captures a {nbytes}-byte {shape} const; "
+                f"it is re-staged on every call — pass it as an argument "
+                f"or donate it"))
+
+    # --- per-equation sweeps (recursive) ------------------------------
+    sync_locs: dict = {}
+    wide_locs: dict = {}
+    weak_locs: dict = {}
+    for eqn in _walk_eqns(jaxpr):
+        prim = eqn.primitive.name
+        if prim in HOST_SYNC_PRIMITIVES:
+            sync_locs[prim] = sync_locs.get(prim, 0) + 1
+        if not inputs_wide:
+            for v in eqn.outvars:
+                aval = _aval_of(v)
+                if aval is not None and str(aval.dtype) in _WIDE:
+                    key = (prim, str(aval.dtype))
+                    wide_locs[key] = wide_locs.get(key, 0) + 1
+        if prim == "convert_element_type":
+            src = _aval_of(eqn.invars[0])
+            dst = eqn.params.get("new_dtype")
+            if (src is not None and dst is not None
+                    and getattr(src, "weak_type", False)
+                    and np.dtype(dst).itemsize > src.dtype.itemsize):
+                key = (str(src.dtype), str(np.dtype(dst)))
+                weak_locs[key] = weak_locs.get(key, 0) + 1
+        _check_carry(name, eqn, findings, name)
+
+    for prim, n in sorted(sync_locs.items()):
+        findings.append(Finding(
+            PASS, "host-sync", "error", f"{name}:{prim}",
+            f"{name}: {n}x {prim} — host round-trip inside a compiled "
+            f"program stalls the device every call"))
+    for (prim, dt), n in sorted(wide_locs.items()):
+        findings.append(Finding(
+            PASS, "dtype-64", "error", f"{name}:{prim}:{dt}",
+            f"{name}: {n}x {prim} produces {dt} in a ≤32-bit graph — "
+            f"unintended x64 promotion"))
+    for (src, dst), n in sorted(weak_locs.items()):
+        findings.append(Finding(
+            PASS, "weak-widen", "warning", f"{name}:{src}->{dst}",
+            f"{name}: {n}x weak {src} operand widened to {dst} — a python "
+            f"scalar is silently promoting the graph"))
+
+    # --- dead code (top level only: sub-jaxpr outputs are structural) --
+    live = _live_eqns(jaxpr)
+    dead: dict = {}
+    for idx, eqn in enumerate(jaxpr.eqns):
+        if idx not in live:
+            dead[eqn.primitive.name] = dead.get(eqn.primitive.name, 0) + 1
+    for prim, n in sorted(dead.items()):
+        findings.append(Finding(
+            PASS, "dead-code", "warning", f"{name}:{prim}",
+            f"{name}: {n}x {prim} equation(s) never reach an output — "
+            f"dropped value still traced (XLA will DCE it, but the trace "
+            f"hides intent; drop it at the source or baseline it)"))
+    return findings
+
+
+def run(records: Iterable) -> List[Finding]:
+    """Lint every :class:`ProgramRecord` (from ``enumerate_programs``)."""
+    import jax
+
+    findings: List[Finding] = []
+    for rec in records:
+        closed = jax.make_jaxpr(rec.fn)(*rec.args)
+        findings.extend(lint_jaxpr(rec.name, closed))
+    return findings

@@ -1,0 +1,157 @@
+"""Sharding contract checker: entry PartitionSpecs + replication smells.
+
+Compiles the slot-grid ``round`` program under ``use_sharding`` for each
+:class:`GridSpec` and parses the SPMD-partitioned HLO (the
+``launch.hlo_analysis`` helpers, which see PER-DEVICE shard shapes):
+
+* ``entry-spec``  — a state leaf the rule table says is sharded did not
+                    enter the partitioned program at its expected local
+                    shard shape (error): the constraint was dropped
+                    somewhere between the pspec and XLA.
+* ``replicated``  — an input the rules expect sharded entered at its
+                    full global shape: every device pays full HBM for it
+                    (error).
+* ``skipped``     — not enough devices to build the mesh; the pass needs
+                    a forced multi-device CPU (``--devices N`` on the
+                    CLI, or ``XLA_FLAGS=--xla_force_host_platform_``
+                    ``device_count=N`` before jax imports) (info).
+
+Leaves whose pspec the rule table itself leaves replicated (e.g. a dim
+the mesh size does not divide, after fallbacks) are exempt from both
+checks — they are *expected* to replicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence
+
+from repro.analysis.report import Finding
+
+PASS = "sharding"
+
+
+def slot_state_axes(spec):
+    """Logical-axes tree matching ``_slot_state_structs(spec)`` leaf for
+    leaf (see ``serve/README.md``: slots ride 'data', cores stay local
+    when slots already hold it)."""
+    from repro.core.chords import ChordsCarry
+    from repro.serve.executor import SlotState
+
+    nlat = len(spec.latent_shape)
+    grid_lat = ("slots", "cores") + (None,) * nlat
+    lat = ("slots",) + (None,) * nlat
+    sk = ("slots", "cores")
+    s = ("slots",)
+    return SlotState(
+        carry=ChordsCarry(x=grid_lat, x_snap=grid_lat, f_snap=grid_lat,
+                          p=sk, finals=grid_lat),
+        i_arr=sk, rtol=s, rounds=s, live=s, done=s, has_last=s,
+        last_out=lat, result=lat, rounds_used=s, chosen=s)
+
+
+def data_axis_size(device_count: int, slot_counts: Sequence[int]) -> int:
+    """Largest power-of-two mesh size <= device_count dividing every S."""
+    d = 1
+    while (d * 2 <= device_count
+           and all(s % (d * 2) == 0 for s in slot_counts)):
+        d *= 2
+    return d
+
+
+def _local_dims(pspec, shape, axis_sizes) -> List[int]:
+    from repro.dist.sharding import normalize_spec
+
+    entries = normalize_spec(pspec, len(shape))
+    return [int(d) // math.prod(axis_sizes[a] for a in e)
+            for d, e in zip(shape, entries)]
+
+
+def check_grid_round(executor, spec, mesh, rules,
+                     min_bytes: int = 0) -> List[Finding]:
+    """Compile one GridSpec's round program under the mesh; verify every
+    SlotState leaf enters at its rule-table shard shape."""
+    import jax
+    import numpy as np
+
+    from repro.dist.sharding import ShardingCtx, use_sharding
+    from repro.launch.hlo_analysis import (find_param_shape,
+                                           replicated_entry_params)
+    from repro.serve.executor import ambient_sharding_tag
+
+    ctx = ShardingCtx(mesh, rules)
+    axis_sizes = dict(mesh.shape)
+    findings: List[Finding] = []
+
+    with use_sharding(mesh, rules):
+        tagged = dataclasses.replace(spec, sharding=ambient_sharding_tag())
+        rec = next(r for r in executor.enumerate_programs(
+            grid_specs=[tagged]) if r.kind == "round")
+        st = rec.args[0]
+        axes = slot_state_axes(tagged)
+        is_leaf = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+        sh = jax.tree_util.tree_map(
+            lambda ax, leaf: ctx.sharding(ax, tuple(leaf.shape)),
+            axes, st, is_leaf=is_leaf)
+        hlo = jax.jit(rec.fn, in_shardings=(sh,)).lower(st).compile() \
+            .as_text()
+
+    loc_base = f"{rec.name}"
+    leaf_axes = jax.tree_util.tree_leaves(axes, is_leaf=is_leaf)
+    leaf_structs = jax.tree_util.tree_leaves(st)
+    sharded_globals = []
+    for ax, leaf in zip(leaf_axes, leaf_structs):
+        shape = tuple(int(d) for d in leaf.shape)
+        nbytes = int(np.prod(shape, dtype=np.int64)
+                     * np.dtype(leaf.dtype).itemsize)
+        if nbytes < min_bytes:
+            continue
+        want = _local_dims(ctx.pspec(ax, shape), shape, axis_sizes)
+        if want == list(shape):
+            continue  # rules leave this leaf replicated — expected
+        sharded_globals.append(shape)
+        hits = [dims for _, dims in find_param_shape(hlo, want)]
+        if want not in hits:
+            findings.append(Finding(
+                PASS, "entry-spec", "error",
+                f"{loc_base}:{ax}{shape}",
+                f"{loc_base}: leaf {ax} {shape} should enter the "
+                f"partitioned program as local shard {want}, but no "
+                f"entry param has that shape (got {sorted(set(map(tuple, hits)))})"))
+
+    for name, dims, nbytes in replicated_entry_params(
+            hlo, sharded_globals, min_bytes):
+        findings.append(Finding(
+            PASS, "replicated", "error",
+            f"{loc_base}:{name}{tuple(dims)}",
+            f"{loc_base}: entry param {name} {dims} ({nbytes} B) enters "
+            f"fully replicated although the rules shard that shape — "
+            f"every device pays its full HBM"))
+    return findings
+
+
+def run(executor, grid_specs, rules=None, min_bytes: int = 0
+        ) -> List[Finding]:
+    """Check every GridSpec on a 1-D 'data' mesh over available devices."""
+    import jax
+
+    from repro.dist.sharding import SERVE_RULES
+
+    rules = dict(SERVE_RULES if rules is None else rules)
+    d = data_axis_size(jax.device_count(),
+                       [s.num_slots for s in grid_specs])
+    if d < 2:
+        return [Finding(
+            PASS, "skipped", "info", f"devices={jax.device_count()}",
+            f"sharding pass needs >= 2 devices dividing every bucket "
+            f"(have {jax.device_count()}); run via the CLI with "
+            f"--devices N")]
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((d,), ("data",))
+    findings: List[Finding] = []
+    for spec in grid_specs:
+        findings.extend(check_grid_round(executor, spec, mesh, rules,
+                                         min_bytes=min_bytes))
+    return findings

@@ -1,0 +1,69 @@
+"""Trace-stability pass: the same spec must trace to the same jaxpr.
+
+The serve engine's one-compile-per-spec discipline (the executor's trace
+cache) assumes tracing is a pure function of the (GridSpec, StreamSpec)
+key. A closure that captures mutable Python state — an `itertools.count`,
+a per-call `time.time()`, a list being appended to — breaks that silently:
+the cached program no longer matches what a fresh trace would build, and
+a cache eviction changes numerics. This pass re-traces every program
+twice and diffs a fingerprint of (jaxpr text + const values).
+
+* ``unstable-trace`` — two traces of the same program differ (error).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Iterable, List
+
+import numpy as np
+
+from repro.analysis.report import Finding
+
+PASS = "trace"
+
+
+def jaxpr_fingerprint(closed_jaxpr) -> str:
+    """Stable digest of a closed jaxpr: structure AND captured consts.
+
+    Var names from jax's pretty-printer are deterministic per trace, so
+    identical programs print identically; const *values* are folded in
+    because two traces can share structure yet bake different numbers.
+    """
+    h = hashlib.sha256(str(closed_jaxpr.jaxpr).encode())
+    for c in closed_jaxpr.consts:
+        try:
+            arr = np.asarray(c)
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        except Exception:  # noqa: BLE001 - non-array const
+            h.update(repr(c).encode())
+    return h.hexdigest()
+
+
+def _first_diff_line(a: str, b: str) -> str:
+    for la, lb in zip(a.splitlines(), b.splitlines()):
+        if la != lb:
+            return f"{la.strip()!r} vs {lb.strip()!r}"
+    return "(jaxpr text identical; captured const values differ)"
+
+
+def run(records: Iterable) -> List[Finding]:
+    """Trace every :class:`ProgramRecord` twice; flag any drift."""
+    import jax
+
+    findings: List[Finding] = []
+    for rec in records:
+        # a fresh wrapper per trace defeats make_jaxpr's fn-identity cache
+        # — otherwise the second "trace" is a cache hit and per-call
+        # closure state can never be observed
+        first = jax.make_jaxpr(lambda *a: rec.fn(*a))(*rec.args)
+        second = jax.make_jaxpr(lambda *a: rec.fn(*a))(*rec.args)
+        if jaxpr_fingerprint(first) != jaxpr_fingerprint(second):
+            findings.append(Finding(
+                PASS, "unstable-trace", "error", rec.name,
+                f"{rec.name}: two traces of the same spec differ — the "
+                f"closure captures per-call Python state, so the trace "
+                f"cache is unsound. First divergence: "
+                f"{_first_diff_line(str(first.jaxpr), str(second.jaxpr))}"))
+    return findings

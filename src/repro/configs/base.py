@@ -11,7 +11,7 @@ Every assigned architecture registers a full config (exact public numbers) and a
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 # ---------------------------------------------------------------------------
 # Model config

@@ -10,7 +10,6 @@ paper's configured presets for N=50 are reproduced exactly.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Sequence
 
 # Paper Section 4.1: sequences used in all experiments (N = 50).

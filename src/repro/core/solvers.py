@@ -7,8 +7,6 @@ SD3/Flux), so it is the default — matching the paper's experimental setup.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -23,13 +23,10 @@ states on the hot data path.
 from __future__ import annotations
 
 import dataclasses
-import os
-from typing import Optional
 
-import jax
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 # --- counter-based uniform bits ----------------------------------------------
 

@@ -9,14 +9,13 @@ exactly the paper's Flux/SD3 setting.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import api as model_api
-from repro.utils.pspec import init_params, param_structs, spec
+from repro.utils.pspec import init_params, spec
 
 
 def wrapper_specs(cfg: ModelConfig, latent_dim: int) -> dict:

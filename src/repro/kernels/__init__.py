@@ -1,2 +1,11 @@
 """Pallas TPU kernels (validated in interpret mode against ref.py oracles):
-rectify (fused CHORDS update), flash_attention, rmsnorm, ssd_scan."""
+rectify (fused CHORDS update), flash_attention, rmsnorm, ssd_scan.
+
+Every kernel builds its ``pl.pallas_call`` block specs from a static
+``launch_meta(...)`` description (``repro.kernels.meta``) so the contract
+checker in ``repro.analysis.pallas_check`` can statically prove
+write-write-race freedom, in-bounds block origins, and VMEM-budget fit for
+the exact tiling the kernel launches with — see
+``src/repro/analysis/README.md`` for the pass inventory.
+"""
+from repro.kernels.meta import BlockMeta, KernelLaunch, block_specs  # noqa: F401

@@ -16,7 +16,34 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import BlockMeta, KernelLaunch, block_specs
+
 NEG_INF = -1e30
+
+
+def launch_meta(b: int, sq: int, h: int, dh: int, sk: int, kvh: int,
+                bq: int, bk: int, dtype="float32") -> KernelLaunch:
+    """Static launch description (operands in [B, H, S, Dh] kernel layout).
+
+    Each program owns one (batch, head, query-tile) output block and streams
+    the whole per-head KV through VMEM; GQA maps query head ``ih`` to KV head
+    ``ih // g``. ``bk`` only shapes the in-kernel streaming loop — the
+    BlockSpec working set is the full [Sk, Dh] KV, which is what the VMEM
+    budget check must see.
+    """
+    g = h // kvh
+    grid = (b, h, sq // bq)
+    dtype = str(jnp.dtype(dtype))
+    q_map = lambda ib, ih, iq: (ib, ih, iq, 0)
+    kv_map = lambda ib, ih, iq, g=g: (ib, ih // g, 0, 0)
+    inputs = (
+        BlockMeta("q", (None, None, bq, dh), q_map, (b, h, sq, dh), dtype),
+        BlockMeta("k", (None, None, sk, dh), kv_map, (b, kvh, sk, dh), dtype),
+        BlockMeta("v", (None, None, sk, dh), kv_map, (b, kvh, sk, dh), dtype),
+    )
+    out = BlockMeta("o", (None, None, bq, dh), q_map, (b, h, sq, dh), dtype)
+    return KernelLaunch("flash_attention.flash_attention", grid, inputs,
+                        (out,))
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, sk, causal, scale):
@@ -71,17 +98,13 @@ def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128,
     kt = k.transpose(0, 2, 1, 3)  # [B, KV, Sk, Dh]
     vt = v.transpose(0, 2, 1, 3)
 
-    grid = (b, h, sq // bq)
+    meta = launch_meta(b, sq, h, dh, sk, kvh, bq, bk, dtype=q.dtype)
     out = pl.pallas_call(
         functools.partial(_flash_kernel, bq=bq, bk=bk, sk=sk, causal=causal,
                           scale=scale),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, None, bq, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
-            pl.BlockSpec((None, None, sk, dh), lambda ib, ih, iq, g=g: (ib, ih // g, 0, 0)),
-            pl.BlockSpec((None, None, sk, dh), lambda ib, ih, iq, g=g: (ib, ih // g, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((None, None, bq, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs)[0],
         out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
         interpret=interpret,
     )(qt, kt, vt)

@@ -14,7 +14,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import BlockMeta, KernelLaunch, block_specs
+
 BLOCK_M = 128 * 1024  # elements per tile; 6 operands * 512KB = 3MB VMEM
+
+_LATENTS = ("x", "f", "x_up", "f_up", "x_snap", "f_snap")
+_SCALARS = ("dt", "dsnap", "fire")
+
+
+def launch_meta(k: int, m: int, dtype="float32",
+                block_m: int = BLOCK_M) -> KernelLaunch:
+    """Static launch description for ``fused_step_rectify`` on padded [K, M]
+    operands (``m`` is the padded length, a multiple of the block).
+
+    The six latent operands and the output tile as (1 core, bm elements);
+    the per-core scalars ride along as [K, 1] blocks pinned to column 0.
+    """
+    bm = min(block_m, m)
+    grid = (k, m // bm)
+    lat_map = lambda i, j: (i, j)
+    scal_map = lambda i, j: (i, 0)
+    dtype = str(jnp.dtype(dtype))
+    lat = [BlockMeta(name, (1, bm), lat_map, (k, m), dtype)
+           for name in _LATENTS]
+    scal = [BlockMeta(name, (1, 1), scal_map, (k, 1),
+                      "int32" if name == "fire" else dtype)
+            for name in _SCALARS]
+    out = BlockMeta("out", (1, bm), lat_map, (k, m), dtype)
+    return KernelLaunch("rectify.fused_step_rectify", grid,
+                        tuple(lat + scal), (out,))
 
 
 def _kernel(x_ref, f_ref, xu_ref, fu_ref, xs_ref, fs_ref, dt_ref, ds_ref,
@@ -42,14 +70,12 @@ def fused_step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
         x, f, x_up, f_up, x_snap, f_snap = map(
             padf, (x, f, x_up, f_up, x_snap, f_snap))
     mp = x.shape[1]
-    grid = (k, mp // bm)
-    lat = pl.BlockSpec((1, bm), lambda i, j: (i, j))
-    scal = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    meta = launch_meta(k, mp, dtype=x.dtype, block_m=bm)
     out = pl.pallas_call(
         _kernel,
-        grid=grid,
-        in_specs=[lat] * 6 + [scal] * 3,
-        out_specs=lat,
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs)[0],
         out_shape=jax.ShapeDtypeStruct((k, mp), x.dtype),
         interpret=interpret,
     )(x, f, x_up, f_up, x_snap, f_snap,

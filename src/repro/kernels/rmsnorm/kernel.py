@@ -8,6 +8,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import BlockMeta, KernelLaunch, block_specs
+
+
+def launch_meta(rows: int, d: int, block_rows: int = 256,
+                dtype="float32") -> KernelLaunch:
+    """Static launch description on padded flattened [rows, D] input
+    (``rows`` a multiple of the row block); the weight block is the whole
+    [D] vector, shared by every program."""
+    br = min(block_rows, rows)
+    dtype = str(jnp.dtype(dtype))
+    row_map = lambda i: (i, 0)
+    inputs = (
+        BlockMeta("x", (br, d), row_map, (rows, d), dtype),
+        BlockMeta("w", (d,), lambda i: (0,), (d,), dtype),
+    )
+    out = BlockMeta("o", (br, d), row_map, (rows, d), dtype)
+    return KernelLaunch("rmsnorm.rmsnorm", (rows // br,), inputs, (out,))
+
 
 def _kernel(x_ref, w_ref, o_ref, *, eps):
     x = x_ref[...].astype(jnp.float32)
@@ -27,14 +45,12 @@ def rmsnorm(x, w, eps: float = 1e-6, block_rows: int = 256, interpret: bool = Tr
     pad = (-rows) % br
     if pad:
         xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    meta = launch_meta(xf.shape[0], d, block_rows=br, dtype=x.dtype)
     out = pl.pallas_call(
         functools.partial(_kernel, eps=eps),
-        grid=(xf.shape[0] // br,),
-        in_specs=[
-            pl.BlockSpec((br, d), lambda i: (i, 0)),
-            pl.BlockSpec((d,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs)[0],
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
         interpret=interpret,
     )(xf, w)

@@ -14,6 +14,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.meta import BlockMeta, KernelLaunch, block_specs
+
+
+def launch_meta(g: int, h: int, lc: int, n: int, hd: int,
+                dtype="float32") -> KernelLaunch:
+    """Static launch description: each program owns one (chunk, head) tile —
+    the whole [Lc, N] C/B projections, [Lc, hd] inputs, and [Lc] decay are
+    VMEM-resident; the two outputs are that tile's y and chunk-final state."""
+    dtype = str(jnp.dtype(dtype))
+    cb_map = lambda i, j: (i, 0, 0)
+    gh_map = lambda i, j: (i, j, 0, 0)
+    inputs = (
+        BlockMeta("c_mat", (None, lc, n), cb_map, (g, lc, n), dtype),
+        BlockMeta("b_mat", (None, lc, n), cb_map, (g, lc, n), dtype),
+        BlockMeta("xdt", (None, None, lc, hd), gh_map, (g, h, lc, hd), dtype),
+        BlockMeta("cum", (None, None, lc), lambda i, j: (i, j, 0),
+                  (g, h, lc), dtype),
+    )
+    outputs = (
+        BlockMeta("y", (None, None, lc, hd), gh_map, (g, h, lc, hd),
+                  "float32"),
+        BlockMeta("s_local", (None, None, hd, n), gh_map, (g, h, hd, n),
+                  "float32"),
+    )
+    return KernelLaunch("ssd_scan.ssd_chunk", (g, h), inputs, outputs)
+
 
 def _kernel(c_ref, b_ref, x_ref, cum_ref, y_ref, s_ref):
     c = c_ref[...].astype(jnp.float32)  # [Lc, N]
@@ -42,20 +68,12 @@ def ssd_chunk(c_mat, b_mat, xdt, cum, interpret: bool = True):
     """
     g_, lc, n = c_mat.shape
     h, hd = xdt.shape[1], xdt.shape[3]
-    grid = (g_, h)
+    meta = launch_meta(g_, h, lc, n, hd, dtype=c_mat.dtype)
     y, s = pl.pallas_call(
         _kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, lc, n), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((None, lc, n), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((None, None, lc, hd), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((None, None, lc), lambda i, j: (i, j, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((None, None, lc, hd), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((None, None, hd, n), lambda i, j: (i, j, 0, 0)),
-        ],
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=block_specs(meta.outputs),
         out_shape=[
             jax.ShapeDtypeStruct((g_, h, lc, hd), jnp.float32),
             jax.ShapeDtypeStruct((g_, h, hd, n), jnp.float32),

@@ -8,15 +8,30 @@ count once (on start).
 from __future__ import annotations
 
 import re
+import warnings
 from typing import Dict
 
-_DT_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+# element sizes in BITS (sub-byte types like s4/u4 are real in quantized
+# HLO; byte-granular tables cannot represent them)
+_DT_BITS = {
+    "pred": 8, "s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
+    "f16": 16, "bf16": 16, "s32": 32, "u32": 32, "f32": 32, "s64": 64,
+    "u64": 64, "f64": 64, "c64": 64, "c128": 128,
+    # every f8 flavor XLA prints today
+    "f8e4m3": 8, "f8e4m3fn": 8, "f8e4m3fnuz": 8, "f8e4m3b11fnuz": 8,
+    "f8e5m2": 8, "f8e5m2fnuz": 8, "f8e3m4": 8, "f8e8m0fnu": 8,
 }
 
-_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+# longest-alternative-first so e.g. "f8e4m3fn" never half-matches as "f8"
+_DTYPE_PAT = "|".join(sorted(_DT_BITS, key=len, reverse=True) + [r"[suf]\d+"])
+
+_SHAPE_RE = re.compile(r"\b(" + _DTYPE_PAT + r")\[([\d,]*)\]")
+
+
+def dtype_bits(dt: str) -> int:
+    """Bits per element for an HLO dtype token. Unknown dtypes raise — use
+    :func:`_shape_bytes`'s warning path for lenient parsing."""
+    return _DT_BITS[dt]
 _COLL_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<shapes>.*?)\s+"
     r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
@@ -27,14 +42,27 @@ _MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
 
 
 def _shape_bytes(shape_str: str) -> int:
-    total = 0
+    """Total bytes of every typed shape in ``shape_str``.
+
+    An unknown dtype token is counted at 0 bytes WITH a warning (it used to
+    be silently guessed at 4 bytes, which inflated byte counts for sub-byte
+    quantized types and hid genuinely new XLA dtypes from the analysis).
+    """
+    bits = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DT_BYTES.get(dt, 4)
-    return total
+        per = _DT_BITS.get(dt)
+        if per is None:
+            warnings.warn(
+                f"hlo_analysis: unknown HLO dtype {dt!r} in {shape_str!r}; "
+                f"counting it as 0 bytes — add it to _DT_BITS",
+                stacklevel=2)
+            continue
+        bits += n * per
+    return bits // 8
 
 
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
@@ -201,7 +229,7 @@ def hbm_bytes_estimate(hlo_text: str) -> float:
 
 _ENTRY_RE = re.compile(r"^ENTRY\s+\S+\s*\((?P<params>.*?)\)\s*->", re.M | re.S)
 _PARAM_RE = re.compile(
-    r"([\w.\-]+)\s*:\s*(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+    r"([\w.\-]+)\s*:\s*(" + _DTYPE_PAT + r")\[([\d,]*)\]")
 
 
 def entry_param_shapes(hlo_text):
@@ -228,6 +256,27 @@ def find_param_shape(hlo_text, global_dims):
     rank = len(global_dims)
     return [(n, dims) for n, _, dims in entry_param_shapes(hlo_text)
             if len(dims) == rank]
+
+
+def replicated_entry_params(hlo_text, global_shapes, min_bytes: int = 0):
+    """Entry params that are FULLY replicated: their per-device (local) dims
+    equal some global shape in ``global_shapes`` exactly, and their size is
+    at least ``min_bytes``. Returns [(name, dims, nbytes)].
+
+    In SPMD-partitioned HLO a sharded input shows its shard dims, so a
+    large input whose local dims still match a known global shape was never
+    partitioned — the accidental-replication smell the sharding contract
+    checker flags (every device pays full HBM for it).
+    """
+    globals_ = {tuple(int(d) for d in g) for g in global_shapes}
+    out = []
+    for name, dt, dims in entry_param_shapes(hlo_text):
+        if tuple(dims) not in globals_:
+            continue
+        nbytes = _shape_bytes(f"{dt}[{','.join(str(d) for d in dims)}]")
+        if nbytes >= min_bytes:
+            out.append((name, dims, nbytes))
+    return out
 
 
 # TPU v5e constants (assignment-provided)

@@ -30,7 +30,7 @@ from repro.dist.fault_tolerance import (HeartbeatMonitor, WorkerLost,
 from repro.dist.sharding import (TRAIN_RULES, ShardingCtx, tree_shardings,
                                  use_sharding)
 from repro.models import api as model_api
-from repro.optim import AdamWConfig, init_state, state_axes
+from repro.optim import AdamWConfig, state_axes
 from repro.train import TrainLoopConfig, train_loop
 from repro.train.train_step import make_train_step
 from repro.utils import pspec

@@ -7,7 +7,6 @@ Every family module exposes (duck-typed):
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

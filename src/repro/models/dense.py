@@ -11,7 +11,6 @@ entry points share one layer body:
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -540,10 +540,15 @@ class ContinuousEngine:
         self._wasted_sum += (self.s - live_ct) * ran
 
         out: list[tuple[int, SampleOut]] = []
-        for slot in range(self.s):
+        drain = [slot for slot in range(self.s)
+                 if self._slot_item[slot] is not None and done[slot]]
+        # one gather + one transfer for the whole drain set — a per-slot
+        # device_get here was an extra host sync per finished request
+        # (caught by the repro.analysis triage)
+        results = jax.device_get(
+            self.state.result[np.asarray(drain)]) if drain else []
+        for j, slot in enumerate(drain):
             item = self._slot_item[slot]
-            if item is None or not done[slot]:
-                continue
             ru = int(rounds_used[slot])
             # queue wait is measured from SUBMIT time — eviction/re-admission
             # cycles and queue reordering all land in the same number
@@ -553,7 +558,7 @@ class ContinuousEngine:
                 self._deadline_misses += int(
                     self.round_count > item.deadline_round)
             res = SampleOut(
-                sample=jax.device_get(self.state.result[slot]),
+                sample=results[j],
                 rounds_used=ru,
                 accepted_core=int(chosen[slot]),
                 speedup=self.n / max(1, ru),

@@ -126,9 +126,49 @@ class GridPrograms(NamedTuple):
     init_state: Callable  # () -> SlotState (host-side, not compiled)
 
 
-def _build_grid(drift, tgrid, n: int, spec: GridSpec,
-                use_kernel: bool, kernel_interpret: bool) -> GridPrograms:
-    """Build + jit the slot-grid program set for one GridSpec."""
+class ProgramRecord(NamedTuple):
+    """One enumerable program: the UNJITTED body + abstract example args.
+
+    The static-analysis subsystem (``repro.analysis``) consumes these —
+    ``jax.make_jaxpr(fn)(*args)`` traces the exact program the executor
+    would compile, without compiling or allocating anything.
+    """
+
+    name: str     # e.g. "grid[S=4,K=4,(4,),f32]/round"
+    kind: str     # round | admit | multi | stream | migrate
+    fn: Callable
+    args: Tuple   # ShapeDtypeStruct pytrees matching the program signature
+
+
+def _slot_state_structs(spec: GridSpec) -> SlotState:
+    """Abstract ``SlotState`` for ``spec`` (ShapeDtypeStructs, no device
+    memory) — mirrors ``init_state`` leaf for leaf."""
+    s, k = spec.num_slots, spec.num_cores
+    dtype = jnp.dtype(spec.dtype)
+    lat = jax.ShapeDtypeStruct((s,) + spec.latent_shape, dtype)
+    grid_lat = jax.ShapeDtypeStruct((s, k) + spec.latent_shape, dtype)
+    sk_i32 = jax.ShapeDtypeStruct((s, k), jnp.int32)
+    s_i32 = jax.ShapeDtypeStruct((s,), jnp.int32)
+    s_bool = jax.ShapeDtypeStruct((s,), jnp.bool_)
+    return SlotState(
+        carry=ChordsCarry(x=grid_lat, x_snap=grid_lat, f_snap=grid_lat,
+                          p=sk_i32, finals=grid_lat),
+        i_arr=sk_i32,
+        rtol=jax.ShapeDtypeStruct((s,), jnp.float32),
+        rounds=s_i32, live=s_bool, done=s_bool, has_last=s_bool,
+        last_out=lat, result=lat,
+        rounds_used=s_i32, chosen=s_i32,
+    )
+
+
+def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
+              use_kernel: bool, kernel_interpret: bool) -> dict:
+    """The slot-grid program bodies for one GridSpec, UNJITTED.
+
+    ``_build_grid`` wraps these in ``jax.jit`` for serving;
+    ``RoundExecutor.enumerate_programs`` hands them (plus abstract args) to
+    the static-analysis passes, which need raw traceable callables.
+    """
     s, k = spec.num_slots, spec.num_cores
     dtype = jnp.dtype(spec.dtype)
     slot_round = make_slot_round_body(drift, tgrid, n, k,
@@ -138,10 +178,13 @@ def _build_grid(drift, tgrid, n: int, spec: GridSpec,
     def round_fn(st: SlotState) -> SlotState:
         """One lockstep round for every live slot + per-slot accept test."""
         active = st.live
-        carry, _ = slot_round(st.carry, st.i_arr, st.rounds, active)
+        # slot_round's emitted IS (emit_rounds == r) & active — the live
+        # cores that wrote t=1 this round; recomputing it from the
+        # scheduler table here left the returned mask dead in the jaxpr
+        # (caught by repro.analysis jaxpr:dead-code)
+        carry, hit = slot_round(st.carry, st.i_arr, st.rounds, active)
         emit = scheduler.emit_rounds_jnp(st.i_arr, n)  # [S, K]
         r = st.rounds
-        hit = (emit == r[:, None]) & active[:, None]
         any_emit = jnp.any(hit, axis=1)
         ek = jnp.argmax(hit, axis=1).astype(jnp.int32)  # slowest emitter wins
         out = carry.x[jnp.arange(s), ek]  # [S, ...]
@@ -225,14 +268,24 @@ def _build_grid(drift, tgrid, n: int, spec: GridSpec,
             chosen=jnp.zeros((s,), jnp.int32),
         )
 
-    return GridPrograms(spec=spec, round=jax.jit(round_fn),
-                        multi=jax.jit(multi_fn), admit=jax.jit(admit_fn),
-                        init_state=init_state)
+    return {"round": round_fn, "admit": admit_fn, "multi": multi_fn,
+            "init_state": init_state}
 
 
-def _build_stream(drift, tgrid, n: int, spec: StreamSpec,
-                  use_kernel: bool, kernel_interpret: bool) -> Callable:
-    """Build + jit the early-exit streaming program (StreamingSampler's)."""
+def _build_grid(drift, tgrid, n: int, spec: GridSpec,
+                use_kernel: bool, kernel_interpret: bool) -> GridPrograms:
+    """Build + jit the slot-grid program set for one GridSpec."""
+    fns = _grid_fns(drift, tgrid, n, spec, use_kernel, kernel_interpret)
+    return GridPrograms(spec=spec, round=jax.jit(fns["round"]),
+                        multi=jax.jit(fns["multi"]),
+                        admit=jax.jit(fns["admit"]),
+                        init_state=fns["init_state"])
+
+
+def _build_stream_fn(drift, tgrid, n: int, spec: StreamSpec,
+                     use_kernel: bool, kernel_interpret: bool) -> Callable:
+    """The early-exit streaming program body (StreamingSampler's), UNJITTED
+    (``_build_stream`` jits it; ``enumerate_programs`` lints it raw)."""
     i_arr = jnp.asarray(spec.i_seq, jnp.int32)
     emit = jnp.asarray(scheduler.emit_rounds(list(spec.i_seq), n))
     round_body = make_round_body(drift, tgrid, i_arr, n, spec.num_cores,
@@ -278,7 +331,14 @@ def _build_stream(drift, tgrid, n: int, spec: StreamSpec,
         rounds = jnp.where(fell_through, n, rounds)
         return result, rounds, chosen
 
-    return jax.jit(run)
+    return run
+
+
+def _build_stream(drift, tgrid, n: int, spec: StreamSpec,
+                  use_kernel: bool, kernel_interpret: bool) -> Callable:
+    """Build + jit the early-exit streaming program (StreamingSampler's)."""
+    return jax.jit(_build_stream_fn(drift, tgrid, n, spec,
+                                    use_kernel, kernel_interpret))
 
 
 class RoundExecutor:
@@ -371,6 +431,60 @@ class RoundExecutor:
                 f"can only migrate lanes between grids differing in S: "
                 f"{src_spec} -> {dst_spec}")
         return self._migrate
+
+    # -- static-analysis enumeration hook -------------------------------------
+
+    def enumerate_programs(self, grid_specs=(), stream_specs=(),
+                           stream_latent_shape=(4,), stream_batch: int = 2,
+                           migrate_pairs=()) -> list:
+        """Every program this executor can build for the given specs, as
+        :class:`ProgramRecord`s with UNJITTED bodies + abstract args.
+
+        This is the enumeration surface ``repro.analysis`` lints: jaxpr
+        passes ``jax.make_jaxpr(rec.fn)(*rec.args)`` each record without
+        compiling, allocating, or touching the trace cache (records are
+        built fresh — enumeration never pollutes ``retraces``).
+        """
+        records: list = []
+        for spec in grid_specs:
+            fns = _grid_fns(self.drift, self.tgrid, self.n, spec,
+                            self.use_kernel, self.kernel_interpret)
+            st = _slot_state_structs(spec)
+            s, k = spec.num_slots, spec.num_cores
+            tag = (f"grid[S={s},K={k},{spec.latent_shape},"
+                   f"{jnp.dtype(spec.dtype).name}]")
+            dtype = jnp.dtype(spec.dtype)
+            records.append(ProgramRecord(
+                f"{tag}/round", "round", fns["round"], (st,)))
+            records.append(ProgramRecord(
+                f"{tag}/admit", "admit", fns["admit"],
+                (st, jax.ShapeDtypeStruct((s,), jnp.bool_),
+                 jax.ShapeDtypeStruct((s,) + spec.latent_shape, dtype),
+                 jax.ShapeDtypeStruct((s, k), jnp.int32),
+                 jax.ShapeDtypeStruct((s,), jnp.float32))))
+            records.append(ProgramRecord(
+                f"{tag}/multi", "multi", fns["multi"],
+                (st, jax.ShapeDtypeStruct((s,), jnp.bool_),
+                 jax.ShapeDtypeStruct((), jnp.int32))))
+        for spec in stream_specs:
+            fn = _build_stream_fn(self.drift, self.tgrid, self.n, spec,
+                                  self.use_kernel, self.kernel_interpret)
+            shape = ((stream_batch,) + tuple(stream_latent_shape)
+                     if spec.batched else tuple(stream_latent_shape))
+            live = jax.ShapeDtypeStruct((stream_batch,) if spec.batched
+                                        else (), jnp.bool_)
+            records.append(ProgramRecord(
+                f"stream[K={spec.num_cores},i={list(spec.i_seq)},"
+                f"rtol={spec.rtol},batched={spec.batched}]", "stream", fn,
+                (jax.ShapeDtypeStruct(shape, jnp.float32), live)))
+        for src, dst in migrate_pairs:
+            s_src, s_dst = src.num_slots, dst.num_slots
+            records.append(ProgramRecord(
+                f"migrate[{s_src}->{s_dst}]", "migrate", gather_slots,
+                (_slot_state_structs(dst), _slot_state_structs(src),
+                 jax.ShapeDtypeStruct((s_dst,), jnp.bool_),
+                 jax.ShapeDtypeStruct((s_dst,), jnp.int32))))
+        return records
 
     @property
     def migration_traces(self) -> int:

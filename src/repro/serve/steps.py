@@ -2,7 +2,6 @@
 the dry-run cells and the generation example. Greedy sampling included."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

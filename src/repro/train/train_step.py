@@ -9,8 +9,6 @@ the 2-D-sharded fp32 master state.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

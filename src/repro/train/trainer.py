@@ -5,10 +5,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.dist.checkpoint import CheckpointManager

@@ -1,0 +1,307 @@
+"""Static-analysis subsystem: seeded mutants + clean-tree + baseline flow.
+
+Each mutant test plants exactly one defect the ISSUE names and asserts the
+*intended* pass (and only it) catches it: an overlapping ``index_map``
+(write-write race), an oversized block (VMEM), an injected
+``astype(float64)`` (dtype drift), and a closure-captured Python float
+that varies per call (trace instability). The race detector additionally
+gets a permutation-invariance property test via the hypothesis shim.
+"""
+import json
+import random
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis import jaxpr_lint, pallas_check, trace_check
+from repro.analysis.report import Baseline, Finding, Report
+from repro.kernels.meta import BlockMeta, KernelLaunch
+from repro.serve.executor import GridSpec, ProgramRecord, RoundExecutor
+
+
+def _codes(findings):
+    return sorted({(f.pass_name, f.code) for f in findings})
+
+
+def _mutant_launch(out_meta):
+    return KernelLaunch("mutant.k", (2, 2), (), (out_meta,))
+
+
+# --- seeded mutants: one defect, one pass -----------------------------------
+
+def test_mutant_overlapping_index_map_is_a_race():
+    # every grid program writes block (0, 0): pure write-write race — no
+    # OOB, and blocks are tiny so no VMEM complaint can leak in
+    out = BlockMeta("o", (8, 8), lambda i, j: (0, 0), (16, 16), "float32")
+    found = pallas_check.check_launch(_mutant_launch(out))
+    assert _codes(found) == [("pallas", "ww-race")], found
+    assert "overlapping output blocks" in found[0].message
+
+
+def test_mutant_oversized_block_busts_vmem():
+    # one (4096, 4096) f32 block = 64 MiB, x2 double-buffered, vs 16 MiB
+    out = BlockMeta("o", (4096, 4096), lambda i, j: (i, j),
+                    (8192, 8192), "float32")
+    found = pallas_check.check_launch(_mutant_launch(out))
+    assert _codes(found) == [("pallas", "vmem")], found
+    assert found[0].severity == "error"
+
+
+def test_mutant_shifted_index_map_is_oob():
+    # index_map i -> i + 1 pushes the last block one block past the end
+    out = BlockMeta("o", (128,), lambda i: (i + 1,), (256,), "float32")
+    launch = KernelLaunch("mutant.k", (2,), (), (out,))
+    found = pallas_check.check_launch(launch)
+    assert _codes(found) == [("pallas", "oob-block")], found
+
+
+def test_mutant_astype_f64_is_dtype_drift():
+    def f64_leak(x):
+        return (x.astype(jnp.float64) * 2.0).astype(jnp.float32)
+
+    rec = ProgramRecord("mutant/f64", "round", f64_leak,
+                        (jax.ShapeDtypeStruct((8,), jnp.float32),))
+    # x64 must be ON for the astype to produce real f64 avals (with it off
+    # jax silently keeps f32 and there is nothing to catch)
+    with jax.experimental.enable_x64():
+        lint = jaxpr_lint.run([rec])
+        stab = trace_check.run([rec])
+    assert ("jaxpr", "dtype-64") in _codes(lint), lint
+    assert all(c == ("jaxpr", "dtype-64") for c in _codes(lint)), lint
+    assert stab == []  # the defect is the jaxpr pass's alone
+
+
+def test_mutant_closure_float_is_trace_instability():
+    box = [0.0]
+
+    def drifting(x):
+        box[0] += 1.0  # a "temperature" float re-read at every trace
+        return x * box[0]
+
+    rec = ProgramRecord("mutant/drifting", "round", drifting,
+                        (jax.ShapeDtypeStruct((8,), jnp.float32),))
+    stab = trace_check.run([rec])
+    assert _codes(stab) == [("trace", "unstable-trace")], stab
+    # the jaxpr pass sees any single trace as perfectly healthy
+    assert jaxpr_lint.run([rec]) == []
+
+
+def test_mutant_host_callback_is_host_sync():
+    def chatty(x):
+        y = jax.pure_callback(
+            lambda a: a, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return y + 1.0
+
+    rec = ProgramRecord("mutant/chatty", "round", chatty,
+                        (jax.ShapeDtypeStruct((4,), jnp.float32),))
+    lint = jaxpr_lint.run([rec])
+    assert ("jaxpr", "host-sync") in _codes(lint), lint
+
+
+def test_mutant_dropped_value_is_dead_code():
+    def wasteful(x):
+        _ = jnp.cumsum(x * 3.0)  # traced, never returned
+        return x + 1.0
+
+    rec = ProgramRecord("mutant/wasteful", "round", wasteful,
+                        (jax.ShapeDtypeStruct((8,), jnp.float32),))
+    lint = jaxpr_lint.run([rec])
+    assert ("jaxpr", "dead-code") in _codes(lint), lint
+
+
+# --- race detector: permutation invariance (hypothesis shim) -----------------
+
+@settings(max_examples=8)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from([(2, 2), (3, 2), (4, 1), (2, 3)]))
+def test_race_detection_is_grid_order_invariant(seed, grid):
+    out = BlockMeta("o", (8, 8), lambda i, j: (i // 2, j), (64, 64),
+                    "float32")
+    points = pallas_check.grid_points(grid)
+    shuffled = list(points)
+    random.Random(seed).shuffle(shuffled)
+    assert pallas_check.find_races(out, shuffled) == \
+        pallas_check.find_races(out, points)
+
+
+# --- clean tree: the real kernels and a real grid lint clean -----------------
+
+def test_real_kernel_launches_are_clean():
+    from repro.analysis.surface import kernel_cases
+
+    for case in kernel_cases():
+        assert pallas_check.check_launch(case.launch) == [], case.name
+
+
+def test_kernel_oracles_agree_on_shapes():
+    from repro.analysis.surface import kernel_cases
+
+    for case in kernel_cases():
+        assert pallas_check.check_oracle(
+            case.name, case.op, case.ref, case.op_args, case.ref_args) \
+            == [], case.name
+
+
+def test_oracle_mismatch_is_caught():
+    op = lambda x: x
+    ref = lambda x: x.astype(jnp.bfloat16)
+    args = (jax.ShapeDtypeStruct((4,), jnp.float32),)
+    found = pallas_check.check_oracle("mutant", op, ref, args, args)
+    assert _codes(found) == [("pallas", "oracle-mismatch")], found
+
+
+def test_executor_programs_lint_clean_and_stable():
+    from repro.core.ode import uniform_tgrid
+
+    ex = RoundExecutor(lambda x, t: -x * t, uniform_tgrid(10), 10)
+    spec = GridSpec(num_slots=2, num_cores=3, latent_shape=(4,))
+    recs = ex.enumerate_programs(
+        grid_specs=[spec], migrate_pairs=[(spec, spec)])
+    assert {r.kind for r in recs} == {"round", "admit", "multi", "migrate"}
+    assert jaxpr_lint.run(recs) == []
+    assert trace_check.run(recs) == []
+    # enumeration must never touch the serving trace cache
+    assert ex.stats()["retraces"] == 0
+
+
+# --- baseline / suppression workflow ----------------------------------------
+
+def test_baseline_suppresses_by_key_and_reports_stale(tmp_path):
+    f1 = Finding("jaxpr", "dead-code", "warning", "prog:add", "dropped")
+    f2 = Finding("pallas", "vmem", "error", "k:grid", "too big")
+    report = Report(findings=[f1, f2])
+
+    base = Baseline.from_findings([f1], "known: emitted mask unused")
+    base.keys.add("trace:unstable-trace:gone")  # entry nothing produces
+    assert [f.key for f in report.new_findings(base)] == [f2.key]
+
+    doc = report.write(str(tmp_path / "r.json"), base)
+    assert doc["counts"] == {"error": 1, "warning": 1, "info": 0}
+    assert doc["baseline"]["stale_entries"] == ["trace:unstable-trace:gone"]
+    assert json.load(open(tmp_path / "r.json")) == doc
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"findings": [{"key": "a:b:c"}]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(str(p))
+
+
+def test_finding_key_is_stable_identity():
+    a = Finding("jaxpr", "host-sync", "error", "loc", "one message")
+    b = Finding("jaxpr", "host-sync", "error", "loc", "another message")
+    assert a.key == b.key == "jaxpr:host-sync:loc"
+    with pytest.raises(ValueError):
+        Finding("jaxpr", "x", "fatal", "loc", "bad severity")
+
+
+# --- hlo_analysis satellites -------------------------------------------------
+
+def test_shape_bytes_unknown_dtype_warns_not_guesses():
+    from repro.launch.hlo_analysis import _shape_bytes, dtype_bits
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        n = _shape_bytes("f128[128] f32[4]")
+    assert n == 16  # the unknown token contributes 0, not a 4-byte guess
+    assert any("unknown HLO dtype 'f128'" in str(x.message) for x in w)
+    assert dtype_bits("s4") == 4 and dtype_bits("f8e4m3fn") == 8
+    assert _shape_bytes("s4[16]") == 8  # bits-granular, not byte-rounded
+    assert _shape_bytes("f8e5m2[10]") == 10
+    with pytest.raises(KeyError):
+        dtype_bits("f128")
+
+
+def test_replicated_entry_params_on_synthetic_hlo():
+    from repro.launch.hlo_analysis import replicated_entry_params
+
+    hlo = ("ENTRY %main (p0: f32[2,4,8], p1: f32[8,4,8], p2: f32[8]) "
+           "-> f32[2,4,8] {")
+    # global [8,4,8]: p0 is the 8/4-way shard (fine), p1 full (replicated)
+    hits = replicated_entry_params(hlo, [(8, 4, 8)], min_bytes=128)
+    assert [(n, tuple(d)) for n, d, _ in hits] == [("p1", (8, 4, 8))]
+    # min_bytes gates small arrays out
+    assert replicated_entry_params(hlo, [(8,)], min_bytes=128) == []
+
+
+def test_sharding_helpers():
+    from repro.analysis.sharding_check import (data_axis_size,
+                                               slot_state_axes)
+    from repro.serve.executor import _slot_state_structs
+
+    assert data_axis_size(8, [4, 8, 16]) == 4
+    assert data_axis_size(8, [8, 16]) == 8
+    assert data_axis_size(8, [6]) == 2
+    assert data_axis_size(1, [4]) == 1
+    spec = GridSpec(num_slots=4, num_cores=2, latent_shape=(3, 5))
+    axes = slot_state_axes(spec)
+    structs = _slot_state_structs(spec)
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(a, (str, type(None))) for a in x)
+    for ax, leaf in zip(jax.tree_util.tree_leaves(axes, is_leaf=is_axes),
+                        jax.tree_util.tree_leaves(structs)):
+        assert len(ax) == len(leaf.shape), (ax, leaf.shape)
+
+
+# --- end-to-end CLI (subprocess: forced multi-device for sharding) -----------
+
+@pytest.mark.slow
+def test_mutant_dropped_constraints_are_replication():
+    """Sharding mutant: strip every in_sharding the checker builds, so all
+    inputs enter the partitioned program replicated — the pass must flag
+    both the missing shard shapes and the replication."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        from repro.analysis import sharding_check
+        from repro.analysis.surface import grid_ladder, make_executor
+        from repro.dist.sharding import SERVE_RULES, ShardingCtx
+        from repro.launch.mesh import make_mesh
+
+        def replicated(self, axes, shape=None, reserved=()):
+            from jax.sharding import NamedSharding, PartitionSpec
+            return NamedSharding(self.mesh, PartitionSpec())
+        ShardingCtx.sharding = replicated
+        found = sharding_check.check_grid_round(
+            make_executor(), grid_ladder()[0], make_mesh((4,), ('data',)),
+            dict(SERVE_RULES))
+        codes = {(f.pass_name, f.code) for f in found}
+        assert ('sharding', 'entry-spec') in codes, found
+        assert ('sharding', 'replicated') in codes, found
+        print('OK')
+        """)], capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_cli_full_surface_gates_clean(tmp_path):
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src"))
+    env.pop("XLA_FLAGS", None)  # the CLI must set device count itself
+    out = tmp_path / "report.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--fail-on-new",
+         "--devices", "4", "--out", str(out)],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    doc = json.load(open(out))
+    assert doc["counts"] == {"error": 0, "warning": 0, "info": 0}
+    # the sharding pass really ran (it would emit a 'skipped' info if not)
+    assert len(doc["meta"]["programs"]) >= 12

@@ -4,7 +4,6 @@ Default tests run on a shrunken grid (N_FAST steps) to keep the tier-1 suite
 fast; the paper-size N=50 cases are duplicated under the ``slow`` marker.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -11,7 +11,7 @@ import pytest
 from repro.dist.checkpoint import CheckpointManager
 from repro.dist.fault_tolerance import (DictKVStore, FileKVStore,
                                         HeartbeatMonitor, plan_elastic_mesh)
-from repro.dist.sharding import SERVE_RULES, TRAIN_RULES, ShardingCtx
+from repro.dist.sharding import TRAIN_RULES, ShardingCtx
 
 
 # --- checkpoint -------------------------------------------------------------
@@ -147,7 +147,6 @@ def _mesh2x2():
 def test_pspec_divisible_fallback():
     from jax.sharding import PartitionSpec as P
     import numpy as np
-    from jax.sharding import Mesh
 
     class FakeMesh:
         axis_names = ("data", "model")

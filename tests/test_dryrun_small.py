@@ -11,7 +11,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ENV = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
            PYTHONPATH=os.environ.get("PYTHONPATH", "src"))

@@ -1,7 +1,6 @@
 """Proposition 2.1: rectification reduces approximation error to o(err)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.ode import GaussianMixture

@@ -2,7 +2,6 @@
 serve it through the streaming engine, and check the paper's quality metric
 (latent RMSE vs the sequential oracle)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
