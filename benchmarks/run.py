@@ -14,13 +14,18 @@ non-preempted outputs stay bitwise identical across policies. Per-policy
 stats land in results/serve_smoke.json (uploaded as a CI artifact).
 
 ``--serve-burst`` replays the bursty burst→lull→burst arrival trace
-(``repro.serve.sched.workload.bursty_trace``) through three engines —
-demand-paged elastic, fixed ``S = max_slots``, fixed ``S = min_slots`` —
-and asserts the elastic-capacity contract: strictly fewer wasted
-slot-rounds than fixed-max, p95 latency no worse than fixed-min, total
-retraces bounded by the number of distinct capacity buckets visited, and
-every non-migration-affected request's output bitwise identical to the
-fixed-S run. Stats land in results/serve_burst.json (CI artifact).
+(``repro.serve.sched.workload.bursty_trace``) through four engines —
+demand-paged elastic, the same elastic grid under the async overlap
+runtime (``overlap=True``), fixed ``S = max_slots``, fixed
+``S = min_slots`` — and asserts the elastic-capacity contract: strictly
+fewer wasted slot-rounds than fixed-max, p95 latency no worse than
+fixed-min, total retraces bounded by the number of distinct capacity
+buckets visited, and every non-migration-affected request's output bitwise
+identical to the fixed-S run — plus the async-overlap contract: zero
+speculation rollbacks on the deterministic rtol=0 trace, host syncs
+strictly below the synchronous elastic run, a busy-grid round gap of ~0,
+and bitwise-identical samples. Stats land in results/serve_burst.json
+(CI artifact).
 """
 from __future__ import annotations
 
@@ -151,6 +156,9 @@ def serve_burst() -> dict:
 
     elastic, e_out, e_st = run("elastic", min_slots=min_s, max_slots=max_s,
                                resize_hysteresis=8)
+    easync, a_out, a_st = run("elastic-async", min_slots=min_s,
+                              max_slots=max_s, resize_hysteresis=8,
+                              overlap=True)
     _, fmax_out, fmax_st = run("fixed-max", num_slots=max_s)
     _, fmin_out, fmin_st = run("fixed-min", num_slots=min_s)
 
@@ -169,9 +177,31 @@ def serve_burst() -> dict:
         assert np.array_equal(np.asarray(o.sample),
                               np.asarray(fmax_out[rid].sample)), rid
 
+    # the async-overlap contract (ISSUE 7 acceptance): on the deterministic
+    # rtol=0 trace every speculation confirms, so the async engine serves the
+    # SAME bits while paying strictly fewer done-flag readbacks and keeping
+    # the device fed (host-side round gap ~0 while the grid is busy)
+    assert a_st["speculation_rollbacks"] == 0, a_st["speculation_rollbacks"]
+    assert a_st["host_syncs"] < e_st["host_syncs"], \
+        (a_st["host_syncs"], e_st["host_syncs"])
+    assert a_st["round_gap_count"] > 0 and a_st["round_gap_mean_s"] < 0.25, \
+        (a_st["round_gap_count"], a_st["round_gap_mean_s"])
+    assert sorted(a_out) == sorted(e_out)
+    for rid, o in a_out.items():
+        assert o.rounds_used == e_out[rid].rounds_used, rid
+        assert np.array_equal(np.asarray(o.sample),
+                              np.asarray(e_out[rid].sample)), rid
+    print(f"serve_burst[async],host_syncs={a_st['host_syncs']}"
+          f"(sync={e_st['host_syncs']}),"
+          f"rollbacks={a_st['speculation_rollbacks']},"
+          f"gap_mean_ms={1e3 * a_st['round_gap_mean_s']:.3f},"
+          f"gap_p95_ms={1e3 * a_st['round_gap_p95_s']:.3f}")
+
     out = {"min_slots": min_s, "max_slots": max_s,
-           "elastic": e_st, "fixed_max": fmax_st, "fixed_min": fmin_st,
-           "migrated_rids": sorted(elastic.migrated_rids)}
+           "elastic": e_st, "elastic_async": a_st,
+           "fixed_max": fmax_st, "fixed_min": fmin_st,
+           "migrated_rids": sorted(elastic.migrated_rids),
+           "async_migrated_rids": sorted(easync.migrated_rids)}
     with open(os.path.join(RESULTS_DIR, "serve_burst.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
     print(f"serve_burst,wasted_elastic={e_st['wasted_slot_rounds']},"

@@ -11,7 +11,10 @@ the same drift closure under ``use_sharding``.
 (``repro.serve.sched``); ``--deadline-rounds`` attaches a deadline (lockstep
 rounds from submission) to every request so the deadline-miss rate is
 exercised; ``--device-rounds R`` amortizes the per-round host sync over up
-to R rounds on device while the grid is busy.
+to R rounds on device while the grid is busy; ``--overlap`` switches the
+host loop to the async double-buffered runtime (speculative scheduling
+against cost-model completion predictions, one readback per completion
+event, bitwise-identical results — see serve/README.md "Async runtime").
 
 ``--min-slots/--max-slots`` enable demand-paged capacity: S moves along
 power-of-two buckets, growing immediately on queued demand and shrinking
@@ -69,6 +72,13 @@ def main():
     ap.add_argument("--device-rounds", type=int, default=1,
                     help="max lockstep rounds per device program before a "
                          "host sync (amortizes the done-flag readback)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async double-buffered host loop: speculate the "
+                         "next round's scheduling decision while the "
+                         "current round runs on device, verify on the "
+                         "cost-model-predicted completion rounds only "
+                         "(bitwise-identical results; mispredictions are "
+                         "rolled back, bounded and counted)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -102,7 +112,7 @@ def main():
         n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
         num_slots=args.slots, rtol=args.rtol, policy=args.policy,
         min_slots=args.min_slots, max_slots=args.max_slots,
-        resize_hysteresis=args.resize_hysteresis)
+        resize_hysteresis=args.resize_hysteresis, overlap=args.overlap)
     for i in range(args.requests):
         engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i),
                               deadline_rounds=args.deadline_rounds))
@@ -124,6 +134,14 @@ def main():
           f"{st['preemptions']} preemptions "
           f"({st['preempted_rounds_wasted']} rounds wasted), "
           f"{st['host_syncs']} host syncs for {st['rounds_total']} rounds")
+    if st["overlap"]:
+        print(f"[serve] async: {st['speculations']} speculations "
+              f"({st['speculation_confirms']} confirmed, "
+              f"{st['speculation_rollbacks']} rolled back, "
+              f"{st['speculated_rounds_wasted']} rounds wasted), round gap "
+              f"mean/p95 {1e3 * st['round_gap_mean_s']:.2f}/"
+              f"{1e3 * st['round_gap_p95_s']:.2f} ms over "
+              f"{st['round_gap_count']} gaps")
     if st["min_slots"] != st["max_slots"]:
         print(f"[serve] elastic: S in {st['min_slots']}..{st['max_slots']} "
               f"(now {st['num_slots']}), {st['grows']} grows / "

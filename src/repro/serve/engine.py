@@ -32,13 +32,27 @@ Admission ordering, deadline handling, preemption, and the resize veto live
 in the ``repro.serve.sched`` policy layer (FIFO remains the default); the
 multi-round device loop (``step(max_rounds_on_device=R)``) amortizes the
 per-round done-flag readback when the grid is busy.
+
+``ContinuousEngine(overlap=True)`` replaces the synchronous
+admit → block → drain step with a **double-buffered async dispatch loop**:
+while round R runs on device, the host computes round R+1's *speculative*
+policy decision against the cost model's predicted post-R lane state and
+enqueues the next dispatch immediately; the done-flag readback then either
+*confirms* the speculation (the dispatch is already in flight — outputs
+bitwise-identical to the synchronous path) or *reconciles* it (the
+speculative admission is rolled back through the retained pre-decision
+buffers + the same masked admission program; wasted device work is bounded
+to the one in-flight round and counted in
+``stats()['speculation_rollbacks']``). See the "async runtime" section of
+serve/README.md.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -212,6 +226,22 @@ class ChordsEngine:
         return int(sum(s["rounds"] for s in self.stats))
 
 
+@dataclasses.dataclass
+class _DecisionUndo:
+    """Host-side inverse of one speculatively applied :class:`Decision`.
+
+    The device side of a rollback is trivial — the engine just reinstates
+    the retained pre-decision ``SlotState`` (``admit`` is never donated, so
+    those buffers stay readable). This record undoes the *host* effects:
+    queue membership, preemption credit/counters, and the per-slot mirrors.
+    """
+
+    admissions: List[tuple]          # (slot, item) admitted -> re-queue
+    evictions: List[tuple]           # (slot, item, ran) evicted -> restore
+    prior: Dict[int, tuple]          # slot -> mirror tuple before the decision
+    preempted_new: List[int]         # rids first marked preempted here
+
+
 def bucket_ladder(min_slots: int, max_slots: int) -> List[int]:
     """Power-of-two capacity buckets from ``min_slots`` up to ``max_slots``
     (the top bucket is clamped to ``max_slots`` even off-ladder)."""
@@ -270,6 +300,16 @@ class ContinuousEngine:
     ``num_cores`` is K for every slot. On a mesh, size S to the 'data' axis
     (slots shard over it under ``use_sharding``) and K× the per-slot latent
     to what one shard's HBM holds — see serve/README.md.
+
+    **Async overlap** (``overlap=True``): ``step()`` becomes the
+    double-buffered dispatch loop described in the module docstring — the
+    host never blocks on a round it has not already replaced with the next
+    dispatch. With exact predictions (``rtol=0``: the force-accept round is
+    closed-form) every speculation confirms and the run is bitwise-identical
+    to ``overlap=False`` on the same trace; mispredictions are reconciled by
+    rolling the speculative admission back (bounded, counted — see
+    ``stats()['speculation_rollbacks']``). The synchronous mode is the
+    default and its behavior is unchanged.
     """
 
     def __init__(self, drift: Callable, latent_shape: tuple, n_steps: int,
@@ -279,6 +319,7 @@ class ContinuousEngine:
                  min_slots: Optional[int] = None,
                  max_slots: Optional[int] = None,
                  resize_hysteresis: int = 8,
+                 overlap: bool = False,
                  executor: Optional[RoundExecutor] = None,
                  use_kernel: Optional[bool] = None):
         self.latent_shape = tuple(latent_shape)
@@ -330,15 +371,35 @@ class ContinuousEngine:
         self._speedups: List[float] = []  # floats only — retaining served
         # SampleOuts (full latents) would leak without bound in a
         # long-lived serving process
+        self.overlap = bool(overlap)
+        # speculation accounting (async mode)
+        self._spec_count = 0          # steps that enqueued a speculative admit
+        self._spec_confirms = 0
+        self._spec_rollbacks = 0
+        self._spec_rounds_wasted = 0  # dispatched rounds discarded by rollback
+        self._drain_lag_rounds = 0    # early accepts discovered >= 1 round late
+        # round-gap timer: host-side monotonic gap between consecutive device
+        # dispatches while the grid stays busy — the device-starvation metric
+        # the async loop exists to drive to ~0 (both modes measure it)
+        self._dispatches = 0
+        self._gap_count = 0
+        self._gap_sum = 0.0
+        self._gap_max = 0.0
+        self._gaps: "collections.deque" = collections.deque(maxlen=2048)
+        self._last_dispatch_done: Optional[float] = None
 
     # -- grid management ------------------------------------------------------
 
     def _spec(self, s: int) -> GridSpec:
         # the ambient mesh context is part of the cache key: a program
-        # traced under use_sharding must never be served to a bare engine
+        # traced under use_sharding must never be served to a bare engine.
+        # donate=True: stepping the grid reuses the old state's buffers
+        # (both modes — the async double buffer must not double memory,
+        # and the sync loop never re-reads a superseded state either)
         return GridSpec(num_slots=s, num_cores=self.k,
                         latent_shape=self.latent_shape,
-                        sharding=ambient_sharding_tag())
+                        sharding=ambient_sharding_tag(),
+                        donate=True)
 
     def _install_grid(self, s: int):
         """Fresh grid at capacity ``s`` (construction / empty resize)."""
@@ -350,6 +411,9 @@ class ContinuousEngine:
         self._slot_iseq: List[Optional[list]] = [None] * s
         self._slot_rtol = np.full((s,), self.rtol, np.float32)  # host mirror
         self._admit_round: List[int] = [0] * s
+        # cost-model prediction of the absolute round each lane accepts —
+        # the async engine's speculation horizon (None = slot free)
+        self._pred_done: List[Optional[int]] = [None] * s
 
     def _resize_to(self, new_s: int):
         """Move the grid to capacity ``new_s``, migrating live lanes.
@@ -364,7 +428,7 @@ class ContinuousEngine:
         assert len(occupied) <= new_s, (occupied, new_s)
         old_spec, old_state = self.spec, self.state
         old = (self._slot_item, self._slot_iseq, self._slot_rtol,
-               self._admit_round)
+               self._admit_round, self._pred_done)
         self._install_grid(new_s)
         if occupied:
             mask = np.zeros((new_s,), bool)
@@ -375,6 +439,7 @@ class ContinuousEngine:
                 self._slot_iseq[dst] = old[1][s_old]
                 self._slot_rtol[dst] = old[2][s_old]
                 self._admit_round[dst] = old[3][s_old]
+                self._pred_done[dst] = old[4][s_old]
                 self.migrated_rids.add(old[0][s_old].payload.rid)
             self._migrations += len(occupied)
             self.state = self.executor.migrate(old_spec, self.spec)(
@@ -444,7 +509,11 @@ class ContinuousEngine:
     def _lane_views(self) -> list[LaneView]:
         """Host-side in-flight snapshot — NO device sync: every live lane
         advances exactly the engine's round delta, so progress is
-        ``round_count - admit_round``."""
+        ``round_count - admit_round``. ``invested`` additionally carries the
+        rounds a previously preempted request already burned
+        (``rounds_credit``) — victim ranking must weigh total sunk compute,
+        while ``est_remaining`` must NOT (a re-admitted lane restarts from
+        fresh noise, so credited rounds never reduce remaining work)."""
         lanes = []
         for slot, item in enumerate(self._slot_item):
             if item is None:
@@ -453,41 +522,94 @@ class ContinuousEngine:
             lanes.append(LaneView(
                 slot=slot, item=item, rounds_done=done_r,
                 est_remaining=self.cost.remaining_rounds(
-                    self._slot_iseq[slot], done_r, item.rtol)))
+                    self._slot_iseq[slot], done_r, item.rtol),
+                invested=done_r + item.rounds_credit))
         return lanes
 
-    def _apply_decision(self, dec: Decision):
+    def _apply_decision(self, dec: Decision, now: Optional[int] = None,
+                        record_undo: bool = False
+                        ) -> Optional[_DecisionUndo]:
+        """Apply a policy decision (evictions, then admissions) at round
+        ``now`` (default: the current round).
+
+        Admission init noise is generated *on device* inside the admit
+        program from the stacked request keys — the host never materializes
+        x0, so an admission batch costs zero device<->host latent transfers
+        (it used to pay a d2h normal + re-upload per admission).
+
+        ``record_undo=True`` returns a :class:`_DecisionUndo` that reverses
+        every host-side effect — the async engine applies decisions
+        *speculatively* and must be able to reconcile a misprediction.
+        """
+        now = self.round_count if now is None else now
         adm_slots = {a.slot for a in dec.admissions}
         assert all(s in adm_slots for s in dec.evictions), \
             (dec.evictions, adm_slots)  # eviction exists only to admit
+        undo = _DecisionUndo([], [], {}, []) if record_undo else None
+        if record_undo:
+            for slot in set(dec.evictions) | adm_slots:
+                undo.prior[slot] = (
+                    self._slot_item[slot], self._slot_iseq[slot],
+                    float(self._slot_rtol[slot]), self._admit_round[slot],
+                    self._pred_done[slot])
         for slot in dec.evictions:
             item = self._slot_item[slot]
-            ran = self.round_count - self._admit_round[slot]
+            ran = now - self._admit_round[slot]
             item.rounds_credit += ran
             item.preemptions += 1
             self._preempt_count += 1
             self._preempt_rounds_wasted += ran
+            if record_undo:
+                undo.evictions.append((slot, item, ran))
+                if item.payload.rid not in self.preempted_rids:
+                    undo.preempted_new.append(item.payload.rid)
             self.preempted_rids.add(item.payload.rid)
             self._slot_item[slot] = None
+            self._pred_done[slot] = None
             self.queue.push(item)  # submit round/deadline/credit preserved
         if not dec.admissions:
-            return
+            return undo
         mask = np.zeros(self.s, bool)
-        x0 = np.zeros((self.s,) + self.latent_shape, np.float32)
         i_arr = np.zeros((self.s, self.k), np.int32)
         for a in dec.admissions:
-            req = a.item.payload
             mask[a.slot] = True
-            x0[a.slot] = np.asarray(
-                jax.random.normal(req.key, self.latent_shape))
             i_arr[a.slot] = a.i_seq
             self._slot_rtol[a.slot] = a.item.rtol
             self._slot_item[a.slot] = a.item
             self._slot_iseq[a.slot] = list(a.i_seq)
-            self._admit_round[a.slot] = self.round_count
-        self.state = self._prog.admit(self.state, jnp.asarray(mask),
-                                      jnp.asarray(x0), jnp.asarray(i_arr),
+            self._admit_round[a.slot] = now
+            self._pred_done[a.slot] = self.cost.predict_done_round(
+                a.i_seq, a.item.rtol, now)
+            if record_undo:
+                undo.admissions.append((a.slot, a.item))
+        idx = np.asarray([a.slot for a in dec.admissions], np.int32)
+        kstack = jnp.stack([jnp.asarray(a.item.payload.key)
+                            for a in dec.admissions]).astype(jnp.uint32)
+        keys = jnp.zeros((self.s, 2), jnp.uint32).at[idx].set(kstack)
+        self.state = self._prog.admit(self.state, jnp.asarray(mask), keys,
+                                      jnp.asarray(i_arr),
                                       jnp.asarray(self._slot_rtol))
+        return undo
+
+    def _undo_decision(self, undo: _DecisionUndo):
+        """Reverse the host side of a speculatively applied decision (the
+        device side is the caller reinstating the retained pre-decision
+        state). Queue ordering is key-computed at every pop, so the
+        push/remove round-trips cannot perturb the survivors' order."""
+        for _slot, item in undo.admissions:
+            self.queue.push(item)  # popped by policy.decide: re-enqueue
+        for _slot, item, ran in undo.evictions:
+            self.queue.remove(item)
+            item.rounds_credit -= ran
+            item.preemptions -= 1
+            self._preempt_count -= 1
+            self._preempt_rounds_wasted -= ran
+        for rid in undo.preempted_new:
+            self.preempted_rids.discard(rid)
+        for slot, prior in undo.prior.items():
+            (self._slot_item[slot], self._slot_iseq[slot], rtol,
+             self._admit_round[slot], self._pred_done[slot]) = prior
+            self._slot_rtol[slot] = rtol
 
     def _amortizable(self) -> bool:
         """May the host stay away for several rounds? Yes when nothing it
@@ -500,10 +622,97 @@ class ContinuousEngine:
             return False  # preemption decisions are made between rounds
         return not any(it is None for it in self._slot_item)
 
+    # -- round-gap timer ------------------------------------------------------
+
+    def _mark_dispatch(self):
+        """Called immediately BEFORE handing a round program to the device:
+        records the host-side monotonic gap since the previous dispatch
+        returned. On a busy grid this gap is exactly the time the device
+        sat idle waiting for the host (decision + readback) — the async
+        loop exists to drive it to ~0 (asserted by --serve-burst)."""
+        t = time.monotonic()
+        if self._last_dispatch_done is not None:
+            g = max(0.0, t - self._last_dispatch_done)
+            self._gap_count += 1
+            self._gap_sum += g
+            self._gap_max = max(self._gap_max, g)
+            self._gaps.append(g)
+        self._dispatches += 1
+
+    def _dispatch_done(self):
+        """Called immediately AFTER the dispatch call returns (jax dispatch
+        is async: the call returns once the work is enqueued, which is the
+        moment the device stops needing the host)."""
+        self._last_dispatch_done = time.monotonic()
+
+    # -- shared step pieces ---------------------------------------------------
+
+    def _update_streak(self, live_before: int, live_after: int, ran: int):
+        """Shrink hysteresis in DEVICE-ROUND units for both host paths.
+
+        ``ran`` device rounds are credited when occupancy fit the next
+        bucket down for the whole step (``live_before`` — post-admission —
+        and ``live_after`` — post-drain — both within the lower bucket).
+        A step during which occupancy *dropped* into range credits exactly
+        ONE round regardless of ``ran``: the multi-round device loop exits
+        on the accept that freed the lane, so precisely the final round of
+        the chunk ended at the lower occupancy. (It used to credit the
+        whole ``ran``, so a k-round step banked k rounds of hysteresis off
+        a single low-occupancy round — elastic shrink timing silently
+        depended on ``max_rounds_on_device``.)
+        """
+        lower = self._next_lower_bucket()
+        if lower is None or live_after > lower:
+            self._low_streak = 0
+        elif live_before <= lower:
+            self._low_streak += ran
+        elif ran > 0:
+            # any earlier streak was already zeroed while occupancy sat
+            # above the bucket, so assignment == increment here
+            self._low_streak = 1
+        # ran == 0 (an async verify-only step): no round ran — unchanged
+
+    def _finish_lane(self, item: QueueItem, i_seq, ru: int, chosen_k: int,
+                     sample, acc_round: int) -> tuple[int, SampleOut]:
+        """Account one drained lane. ``acc_round`` is the absolute engine
+        round at which the accept fired — equal to ``round_count`` at the
+        drain in the synchronous engine, and ``admit_round + rounds_used``
+        always (the async engine uses the latter so latency/deadline numbers
+        are identical no matter when the host *discovers* the accept)."""
+        # queue wait is measured from SUBMIT time — eviction/re-admission
+        # cycles and queue reordering all land in the same number
+        latency = acc_round - item.submit_round
+        if math.isfinite(item.deadline_round):
+            self._deadline_total += 1
+            self._deadline_misses += int(acc_round > item.deadline_round)
+        res = SampleOut(sample=sample, rounds_used=ru,
+                        accepted_core=chosen_k,
+                        speedup=self.n / max(1, ru),
+                        latency_rounds=latency)
+        # item.rtol (not the float32 device mirror) so the table key
+        # matches the one predictions are queried with
+        self.cost.observe_accept(i_seq, item.rtol, ru)
+        self._latencies.append(latency)
+        self._speedups.append(res.speedup)
+        return (item.payload.rid, res)
+
     def step(self, max_rounds_on_device: int = 1
              ) -> list[tuple[int, SampleOut]]:
         """Resize check → policy decision → lockstep round(s) → drain.
-        Returns finished requests as [(rid, SampleOut)]."""
+        Returns finished requests as [(rid, SampleOut)].
+
+        With ``overlap=True`` the same contract is served by the async
+        double-buffered loop (:meth:`_step_overlap`): the decision for the
+        next round is made from predicted lane state while the previous
+        round is still in flight, and the done-flag readback happens only
+        when the cost model says a lane is due to finish.
+        """
+        if self.overlap:
+            return self._step_overlap(max_rounds_on_device)
+        return self._step_sync(max_rounds_on_device)
+
+    def _step_sync(self, max_rounds_on_device: int = 1
+                   ) -> list[tuple[int, SampleOut]]:
         self._maybe_resize()
         free = [i for i, it in enumerate(self._slot_item) if it is None]
         if len(self.queue) and (free or self.policy.preemptive):
@@ -517,19 +726,24 @@ class ContinuousEngine:
             # still pages its slots out (each idle step ~ one round)
             if self.min_slots != self.max_slots and not len(self.queue):
                 self._low_streak += 1
+            self._last_dispatch_done = None  # gap timer: busy periods only
             return []
 
         live_ct = sum(it is not None for it in self._slot_item)
         r_dev = max(1, int(max_rounds_on_device))
         if r_dev > 1 and self._amortizable():
-            st, ran_dev = self._prog.multi(self.state, self.state.done,
+            self._mark_dispatch()
+            st, ran_dev = self._prog.multi(self.state,
                                            jnp.asarray(r_dev, jnp.int32))
+            self._dispatch_done()
             self.state = st
             ran, done, rounds_used, chosen = jax.device_get(
                 (ran_dev, st.done, st.rounds_used, st.chosen))
             ran = int(ran)
         else:
+            self._mark_dispatch()
             self.state = self._prog.round(self.state)
+            self._dispatch_done()
             done, rounds_used, chosen = jax.device_get(
                 (self.state.done, self.state.rounds_used, self.state.chosen))
             ran = 1
@@ -549,38 +763,214 @@ class ContinuousEngine:
             self.state.result[np.asarray(drain)]) if drain else []
         for j, slot in enumerate(drain):
             item = self._slot_item[slot]
-            ru = int(rounds_used[slot])
-            # queue wait is measured from SUBMIT time — eviction/re-admission
-            # cycles and queue reordering all land in the same number
-            latency = self.round_count - item.submit_round
-            if math.isfinite(item.deadline_round):
-                self._deadline_total += 1
-                self._deadline_misses += int(
-                    self.round_count > item.deadline_round)
-            res = SampleOut(
-                sample=results[j],
-                rounds_used=ru,
-                accepted_core=int(chosen[slot]),
-                speedup=self.n / max(1, ru),
-                latency_rounds=latency,
-            )
-            # item.rtol (not the float32 device mirror) so the table key
-            # matches the one predictions are queried with
-            self.cost.observe_accept(self._slot_iseq[slot], item.rtol, ru)
-            self._latencies.append(latency)
-            self._speedups.append(res.speedup)
-            out.append((item.payload.rid, res))
+            out.append(self._finish_lane(
+                item, self._slot_iseq[slot], int(rounds_used[slot]),
+                int(chosen[slot]), results[j], acc_round=self.round_count))
             self._slot_item[slot] = None  # slot is free; done flag stays
-            # until the next admission clears it (the lane is frozen)
+            self._pred_done[slot] = None  # until the next admission clears
+            # it (the lane is frozen)
 
-        # shrink hysteresis: occupancy must fit the next bucket down for
-        # `resize_hysteresis` consecutive lockstep rounds
-        lower = self._next_lower_bucket()
         live_after = sum(it is not None for it in self._slot_item)
-        if lower is not None and live_after <= lower:
-            self._low_streak += ran
+        self._update_streak(live_ct, live_after, ran)
+        if not self.has_inflight:
+            self._last_dispatch_done = None
+        return out
+
+    # -- async double-buffered host loop --------------------------------------
+
+    def _step_overlap(self, max_rounds_on_device: int = 1
+                      ) -> list[tuple[int, SampleOut]]:
+        """One async engine step: speculate → dispatch → verify → reconcile.
+
+        The host classifies occupied lanes by the cost model's predicted
+        accept round (``_pred_done``). While no lane is *due*, rounds are
+        dispatched back-to-back with NO readback (the fast path — up to
+        ``max_rounds_on_device`` rounds per program, capped so no predicted
+        accept is overshot). When a lane is due, the host makes the next
+        round's policy decision against the *predicted* post-drain state
+        (due lanes presumed finished), applies it speculatively, dispatches
+        the next round immediately, and only THEN blocks on the previous
+        state's done flags:
+
+        * prediction held → the dispatch already in flight is exactly the
+          one the synchronous engine would have issued (confirmed — with
+          exact ``rtol=0`` predictions this is every step, which is the
+          bitwise-identity contract the tests pin);
+        * prediction missed → the speculative admission targeted a lane
+          that is still running: reinstate the retained pre-decision
+          buffers (``admit`` is never donated), undo the host mirrors,
+          re-decide against the true state, and re-dispatch — one discarded
+          device round, counted in ``speculation_rollbacks`` /
+          ``speculated_rounds_wasted``.
+
+        Drained results are read from the RETAINED pre-round state (the
+        non-donated ``round_keep`` program keeps it readable), and their
+        latency/deadline accounting uses ``admit_round + rounds_used`` —
+        identical numbers to the synchronous engine, independent of when
+        the host discovered the accept.
+        """
+        self._maybe_resize()
+        now = self.round_count
+        occupied = [i for i, it in enumerate(self._slot_item)
+                    if it is not None]
+        free = [i for i, it in enumerate(self._slot_item) if it is None]
+        due = [s for s in occupied if self._pred_done[s] is None
+               or self._pred_done[s] <= now]
+        if not occupied and not len(self.queue):
+            if self.min_slots != self.max_slots:
+                self._low_streak += 1
+            self._last_dispatch_done = None
+            return []
+        want_decide = bool(len(self.queue)) and \
+            bool(free or due or self.policy.preemptive)
+
+        if not due and not want_decide and occupied:
+            # fast path: nothing can finish and nothing to decide — roll up
+            # to r_dev rounds in one program, clipped so the next predicted
+            # accept still lands on a step boundary; read NOTHING back
+            r_dev = max(1, int(max_rounds_on_device))
+            horizon = min(self._pred_done[s] - now for s in occupied)
+            k = max(1, min(r_dev, horizon))
+            self._mark_dispatch()
+            if k == 1:
+                self.state = self._prog.round(self.state)
+            else:
+                self.state = self._prog.roll(self.state,
+                                             jnp.asarray(k, jnp.int32))
+            self._dispatch_done()
+            self.round_count += k
+            live_ct = len(occupied)
+            self._live_sum += live_ct * k
+            self._slot_rounds += self.s * k
+            self._wasted_sum += (self.s - live_ct) * k
+            self._update_streak(live_ct, live_ct, k)
+            return []
+
+        # -- event step: speculate + dispatch ahead of the verify ----------
+        need_verify = bool(due)
+        prev = self.state
+        # drain metadata BEFORE the decision may overwrite it (a confirmed
+        # speculative admit re-targets the due slot in the same step)
+        due_meta = {s: (self._slot_item[s], self._slot_iseq[s],
+                        self._admit_round[s]) for s in due}
+        dec, undo, spec_admits = Decision(), None, []
+        if want_decide:
+            view = EngineView(
+                now=now, queue=self.queue,
+                # predicted post-drain state: due lanes presumed finished.
+                # sorted() matches the ascending slot order the synchronous
+                # engine's free list has at the equivalent step
+                free_slots=sorted(free + due),
+                lanes=[ln for ln in self._lane_views()
+                       if ln.slot not in due_meta],
+                cost=self.cost, speculative=need_verify)
+            dec = self.policy.decide(view)
+            spec_admits = [a.slot for a in dec.admissions
+                           if a.slot in due_meta]
+            if dec.admissions or dec.evictions:
+                undo = self._apply_decision(dec, now=now,
+                                            record_undo=need_verify)
+                if spec_admits:
+                    self._spec_count += 1
+        # lanes presumed still running after the presumed drains: skip the
+        # dispatch entirely when the grid would be empty (the synchronous
+        # engine does not run a round on its final drain either)
+        presumed_live = (len(occupied) - len(due)
+                         + len(dec.admissions) - len(dec.evictions))
+        dispatched = None
+        if presumed_live > 0:
+            self._mark_dispatch()
+            dispatched = (self._prog.round_keep(self.state) if need_verify
+                          else self._prog.round(self.state))
+            self._dispatch_done()
+            self.round_count = now + 1
+
+        out: list[tuple[int, SampleOut]] = []
+        if need_verify:
+            # ONE blocking readback per event step — the flags (and the due
+            # results) of the round that finished while we were speculating
+            done, rounds_used, chosen, due_res = jax.device_get(
+                (prev.done, prev.rounds_used, prev.chosen,
+                 prev.result[np.asarray(due, np.int32)]))
+            self.host_syncs += 1
+            failed = [s for s in spec_admits if not done[s]]
+            if failed:
+                # -- reconcile: a speculative admit targeted a live lane --
+                self._spec_rollbacks += 1
+                if dispatched is not None:
+                    self._spec_rounds_wasted += 1
+                    self.round_count = now
+                dispatched = None
+                self.state = prev
+                self._undo_decision(undo)
+                out += self._drain_due(due, due_meta, done, rounds_used,
+                                       chosen, due_res)
+                for s in due:
+                    if not done[s] and self._slot_item[s] is not None:
+                        self._pred_done[s] = now + 1  # re-verify next step
+                free2 = [i for i, it in enumerate(self._slot_item)
+                         if it is None]
+                if len(self.queue) and (free2 or self.policy.preemptive):
+                    view = EngineView(now=now, queue=self.queue,
+                                      free_slots=free2,
+                                      lanes=self._lane_views(),
+                                      cost=self.cost)
+                    self._apply_decision(self.policy.decide(view), now=now)
+                if any(it is not None for it in self._slot_item):
+                    self._mark_dispatch()
+                    dispatched = self._prog.round(self.state)
+                    self._dispatch_done()
+                    self.round_count = now + 1
+            else:
+                if spec_admits:
+                    self._spec_confirms += 1
+                adm_slots = {a.slot for a in dec.admissions}
+                out += self._drain_due(due, due_meta, done, rounds_used,
+                                       chosen, due_res)
+                for s in due:
+                    if not done[s] and s not in adm_slots:
+                        self._pred_done[s] = now + 1  # overdue: verify again
+                # early accepts (actual < predicted) surface in the same
+                # readback: schedule their drain for the next step
+                for s, it in enumerate(self._slot_item):
+                    if it is not None and s not in due_meta \
+                            and s not in adm_slots and done[s]:
+                        self._drain_lag_rounds += 1
+                        self._pred_done[s] = now + 1
+
+        if dispatched is not None:
+            self.state = dispatched
+            live_ct = sum(it is not None for it in self._slot_item)
+            self._live_sum += live_ct
+            self._slot_rounds += self.s
+            self._wasted_sum += self.s - live_ct
+            self._update_streak(len(occupied), live_ct, 1)
         else:
-            self._low_streak = 0
+            self._update_streak(
+                len(occupied),
+                sum(it is not None for it in self._slot_item), 0)
+        if not self.has_inflight:
+            self._last_dispatch_done = None
+        return out
+
+    def _drain_due(self, due, due_meta, done, rounds_used, chosen, due_res
+                   ) -> list[tuple[int, SampleOut]]:
+        """Drain the due lanes whose accept actually fired, from the
+        retained pre-round arrays. A slot whose speculative re-admission was
+        confirmed already carries its NEW item in the mirrors — the old
+        lane's identity comes from ``due_meta`` and the slot is not freed."""
+        out = []
+        for j, s in enumerate(due):
+            item, i_seq, admit_round = due_meta[s]
+            if not done[s]:
+                continue
+            ru = int(rounds_used[s])
+            out.append(self._finish_lane(item, i_seq, ru, int(chosen[s]),
+                                         due_res[j],
+                                         acc_round=admit_round + ru))
+            if self._slot_item[s] is item:
+                self._slot_item[s] = None  # freed; stale flags stay until
+                self._pred_done[s] = None  # the next admission (frozen lane)
         return out
 
     def run_until_drained(self, max_rounds: Optional[int] = None,
@@ -593,7 +983,11 @@ class ContinuousEngine:
         served: list[tuple[int, SampleOut]] = []
         while len(self.queue) or self.has_inflight:
             served += self.step(max_rounds_on_device=max_rounds_on_device)
-            if self.round_count >= limit:
+            # a multi-round step can legally overshoot `limit` by up to
+            # max_rounds_on_device-1 rounds while finishing the last lane —
+            # only raise when the budget is spent AND work remains
+            if self.round_count >= limit \
+                    and (len(self.queue) or self.has_inflight):
                 raise RuntimeError(
                     f"engine did not drain within {budget} rounds")
         return served
@@ -613,6 +1007,23 @@ class ContinuousEngine:
             "mean_speedup": float(np.mean(self._speedups)) if served else 0.0,
             "policy": self.policy.name,
             "host_syncs": self.host_syncs,
+            # async-overlap accounting (all zero for overlap=False)
+            "overlap": self.overlap,
+            "speculations": self._spec_count,
+            "speculation_confirms": self._spec_confirms,
+            "speculation_rollbacks": self._spec_rollbacks,
+            "speculated_rounds_wasted": self._spec_rounds_wasted,
+            "drain_lag_rounds": self._drain_lag_rounds,
+            # round-gap timer: host-side monotonic gap between consecutive
+            # device dispatches over a busy grid (~0 == device never starved)
+            "dispatches": self._dispatches,
+            "round_gap_count": self._gap_count,
+            "round_gap_mean_s": (self._gap_sum / self._gap_count
+                                 if self._gap_count else 0.0),
+            "round_gap_p95_s": (float(np.percentile(
+                np.asarray(self._gaps, np.float64), 95))
+                if self._gaps else 0.0),
+            "round_gap_max_s": self._gap_max,
             "deadline_total": self._deadline_total,
             "deadline_misses": self._deadline_misses,
             "deadline_miss_rate": self._deadline_misses / self._deadline_total

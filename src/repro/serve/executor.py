@@ -67,6 +67,14 @@ class GridSpec:
     many rounds per host sync regardless of the traced budget it is called
     with. ``None`` (the default, and what the engines pass) leaves the
     budget fully traced so varying R never retraces.
+
+    ``donate=True`` donates the incoming ``SlotState`` buffers to the
+    state-advancing programs (``round`` / ``roll`` / ``multi``), so the
+    double-buffered async engine never holds two copies of the grid in
+    device memory. ``admit`` and ``round_keep`` are never donated: ``admit``
+    is the rollback anchor and ``round_keep`` exists precisely so the async
+    engine can keep the pre-round state readable while the next round is in
+    flight.
     """
 
     num_slots: int
@@ -75,6 +83,7 @@ class GridSpec:
     dtype: str = "float32"
     sharding: Optional[str] = None
     device_rounds: Optional[int] = None
+    donate: bool = False
 
     def __post_init__(self):
         object.__setattr__(self, "latent_shape", tuple(self.latent_shape))
@@ -120,9 +129,11 @@ class GridPrograms(NamedTuple):
     """One GridSpec's compiled program set (all jitted, shared via cache)."""
 
     spec: GridSpec
-    round: Callable      # (SlotState) -> SlotState
-    multi: Callable      # (SlotState, done0, max_rounds) -> (SlotState, ran)
-    admit: Callable      # (SlotState, mask, x0, i_arr, rtol) -> SlotState
+    round: Callable      # (SlotState) -> SlotState  (donated iff spec.donate)
+    round_keep: Callable  # same program, input NEVER donated (async verify)
+    roll: Callable       # (SlotState, k) -> SlotState: k rounds, no accept exit
+    multi: Callable      # (SlotState, max_rounds) -> (SlotState, ran)
+    admit: Callable      # (SlotState, mask, keys, i_arr, rtol) -> SlotState
     init_state: Callable  # () -> SlotState (host-side, not compiled)
 
 
@@ -135,7 +146,7 @@ class ProgramRecord(NamedTuple):
     """
 
     name: str     # e.g. "grid[S=4,K=4,(4,),f32]/round"
-    kind: str     # round | admit | multi | stream | migrate
+    kind: str     # round | admit | multi | roll | stream | migrate
     fn: Callable
     args: Tuple   # ShapeDtypeStruct pytrees matching the program signature
 
@@ -209,8 +220,18 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
             chosen=jnp.where(acc, ek, st.chosen),
         )
 
-    def admit_fn(st: SlotState, mask, x0, i_arr, rtol) -> SlotState:
-        """Masked admission: reset lanes + per-slot accept state in place."""
+    def admit_fn(st: SlotState, mask, keys, i_arr, rtol) -> SlotState:
+        """Masked admission: reset lanes + per-slot accept state in place.
+
+        ``keys`` is ``uint32[S, 2]`` — one PRNG key row per slot (unadmitted
+        rows are ignored through the mask). The init noise is generated
+        *inside* the program: the host never materializes x0, so an
+        admission batch costs zero device<->host latent transfers. The
+        vmapped ``random.normal`` is bitwise identical to per-key unbatched
+        draws (the same equivalence ``ChordsEngine`` already relies on).
+        """
+        x0 = jax.vmap(lambda kk: jax.random.normal(
+            kk, spec.latent_shape))(keys).astype(dtype)
         carry = reset_slots(st.carry, mask, x0, i_arr)
         m_lat = bmask(mask, st.last_out)
         return SlotState(
@@ -227,17 +248,21 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
             chosen=jnp.where(mask, 0, st.chosen),
         )
 
-    def multi_fn(st: SlotState, done0, max_rounds):
+    def multi_fn(st: SlotState, max_rounds):
         """Up to ``max_rounds`` lockstep rounds in ONE device program.
 
         The ``lax.while_loop`` exits as soon as any slot's accept fires
-        (``done`` rises relative to ``done0``, the flags at entry — drained
-        slots keep their stale flag until re-admission, so the delta is
-        exactly "newly finished") or the round budget elapses. The host only
-        reads back afterwards: one sync amortized over up to R rounds.
-        ``max_rounds`` is a traced scalar, so varying R never retraces;
+        (``done`` rises relative to the flags at entry — drained slots keep
+        their stale flag until re-admission, so the delta is exactly "newly
+        finished") or the round budget elapses. The host only reads back
+        afterwards: one sync amortized over up to R rounds. ``max_rounds``
+        is a traced scalar, so varying R never retraces;
         ``spec.device_rounds`` (when set) is a static per-grid cap on it.
+
+        The entry flags are captured *inside* the program (not passed as an
+        argument) so donating the state never aliases a still-needed input.
         """
+        done0 = st.done
         if spec.device_rounds is not None:
             max_rounds = jnp.minimum(max_rounds, spec.device_rounds)
 
@@ -252,6 +277,28 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
 
         return jax.lax.while_loop(cond, body,
                                   (st, jnp.asarray(0, jnp.int32)))
+
+    def roll_fn(st: SlotState, k):
+        """Exactly ``k`` lockstep rounds with NO accept-driven exit.
+
+        The async engine's fast path: when the cost model says no lane can
+        finish for the next ``k`` rounds, the host dispatches them all in
+        one program and reads nothing back. Rounds on an all-dead grid are
+        the identity (the live-mask freezes every lane), so the early
+        all-dead exit below is a pure optimization — the result is bitwise
+        the k-fold composition of ``round``.
+        """
+        def cond(c):
+            st_, i = c
+            return (i < k) & jnp.any(st_.live)
+
+        def body(c):
+            st_, i = c
+            return round_fn(st_), i + 1
+
+        st_out, _ = jax.lax.while_loop(cond, body,
+                                       (st, jnp.asarray(0, jnp.int32)))
+        return st_out
 
     def init_state() -> SlotState:
         lat = jnp.zeros((s,) + spec.latent_shape, dtype)
@@ -269,15 +316,30 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
         )
 
     return {"round": round_fn, "admit": admit_fn, "multi": multi_fn,
-            "init_state": init_state}
+            "roll": roll_fn, "init_state": init_state}
 
 
 def _build_grid(drift, tgrid, n: int, spec: GridSpec,
                 use_kernel: bool, kernel_interpret: bool) -> GridPrograms:
-    """Build + jit the slot-grid program set for one GridSpec."""
+    """Build + jit the slot-grid program set for one GridSpec.
+
+    When ``spec.donate`` the state-advancing programs donate their input
+    ``SlotState`` (argnum 0), so stepping the grid reuses the old buffers
+    instead of holding both generations live. ``round_keep`` is the same
+    round program compiled WITHOUT donation — the async engine dispatches
+    through it when it must keep the pre-round state readable for the
+    verify/rollback readback (when not donating it is simply ``round``).
+    ``admit`` is never donated: the engine may need to re-admit against the
+    retained pre-decision state after a speculation rollback.
+    """
     fns = _grid_fns(drift, tgrid, n, spec, use_kernel, kernel_interpret)
-    return GridPrograms(spec=spec, round=jax.jit(fns["round"]),
-                        multi=jax.jit(fns["multi"]),
+    don = (0,) if spec.donate else ()
+    round_jit = jax.jit(fns["round"], donate_argnums=don)
+    return GridPrograms(spec=spec, round=round_jit,
+                        round_keep=(jax.jit(fns["round"]) if spec.donate
+                                    else round_jit),
+                        roll=jax.jit(fns["roll"], donate_argnums=don),
+                        multi=jax.jit(fns["multi"], donate_argnums=don),
                         admit=jax.jit(fns["admit"]),
                         init_state=fns["init_state"])
 
@@ -453,19 +515,20 @@ class RoundExecutor:
             s, k = spec.num_slots, spec.num_cores
             tag = (f"grid[S={s},K={k},{spec.latent_shape},"
                    f"{jnp.dtype(spec.dtype).name}]")
-            dtype = jnp.dtype(spec.dtype)
             records.append(ProgramRecord(
                 f"{tag}/round", "round", fns["round"], (st,)))
             records.append(ProgramRecord(
                 f"{tag}/admit", "admit", fns["admit"],
                 (st, jax.ShapeDtypeStruct((s,), jnp.bool_),
-                 jax.ShapeDtypeStruct((s,) + spec.latent_shape, dtype),
+                 jax.ShapeDtypeStruct((s, 2), jnp.uint32),
                  jax.ShapeDtypeStruct((s, k), jnp.int32),
                  jax.ShapeDtypeStruct((s,), jnp.float32))))
             records.append(ProgramRecord(
                 f"{tag}/multi", "multi", fns["multi"],
-                (st, jax.ShapeDtypeStruct((s,), jnp.bool_),
-                 jax.ShapeDtypeStruct((), jnp.int32))))
+                (st, jax.ShapeDtypeStruct((), jnp.int32))))
+            records.append(ProgramRecord(
+                f"{tag}/roll", "roll", fns["roll"],
+                (st, jax.ShapeDtypeStruct((), jnp.int32))))
         for spec in stream_specs:
             fn = _build_stream_fn(self.drift, self.tgrid, self.n, spec,
                                   self.use_kernel, self.kernel_interpret)

@@ -144,8 +144,29 @@ class CostModel:
     def remaining_rounds(self, i_seq: Sequence[int], rounds_done: int,
                          rtol: Optional[float] = None) -> int:
         """Predicted rounds left for an in-flight lane (>= 1: a live lane
-        that outran the prediction can accept on any upcoming emission)."""
+        that outran the prediction can accept on any upcoming emission).
+
+        ``rounds_done`` must count rounds in the current admission only — a
+        re-admitted lane restarts from fresh noise, so rounds credited from
+        a previous admission (``QueueItem.rounds_credit``) reduce *queue
+        aging*, never remaining work (victim ranking accounts for them via
+        ``LaneView.invested`` instead).
+        """
         return max(1, self.predict_rounds(i_seq, rtol) - rounds_done)
+
+    def predict_done_round(self, i_seq: Sequence[int], rtol: Optional[float],
+                           admit_round: int) -> int:
+        """Absolute engine round at which a lane admitted at ``admit_round``
+        is predicted to accept — the async engine's speculation horizon.
+
+        For ``rtol <= 0`` this is *exact* (``admit_round + N``: the engine
+        force-accepts core 0's sequential solve, deterministically), which
+        is why speculation on the deterministic CI workloads always
+        confirms. For calibrated/heuristic predictions it is a best guess;
+        the engine reconciles a miss by rolling back the speculative
+        admission (bounded, counted work — never wrong results).
+        """
+        return int(admit_round) + max(1, self.predict_rounds(i_seq, rtol))
 
     def wait_rounds(self, free_slots: int,
                     inflight_remaining: Sequence[int]) -> float:

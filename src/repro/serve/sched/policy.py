@@ -42,12 +42,26 @@ from repro.serve.sched.queue import AdmissionQueue, QueueItem
 @dataclasses.dataclass
 class LaneView:
     """Host-side snapshot of one occupied slot (no device sync needed:
-    every live lane advances exactly one lockstep round per engine round)."""
+    every live lane advances exactly one lockstep round per engine round).
+
+    ``rounds_done`` counts rounds in the *current* admission only (that is
+    what ``cost.remaining_rounds`` needs: a re-admitted lane restarts its
+    solve from fresh noise, so credited rounds do not reduce remaining
+    work). ``invested`` additionally includes ``item.rounds_credit`` — the
+    rounds a preempted request already burned before eviction — and is the
+    sunk-compute measure preemption victim ranking must use: evicting the
+    lane with the least *total* investment wastes the least device work.
+    """
 
     slot: int
     item: QueueItem
     rounds_done: int
     est_remaining: int
+    invested: int = -1  # defaults to rounds_done (see __post_init__)
+
+    def __post_init__(self):
+        if self.invested < 0:
+            self.invested = self.rounds_done
 
     def slack(self, now: int) -> float:
         return self.item.deadline_round - now - self.est_remaining
@@ -55,11 +69,24 @@ class LaneView:
 
 @dataclasses.dataclass
 class EngineView:
+    """What a policy sees when asked to decide.
+
+    ``speculative=True`` marks a view built by the async engine *ahead* of
+    the verifying readback: ``free_slots`` then includes lanes the cost
+    model predicts will have drained by ``now`` (and ``lanes`` excludes
+    them). Policies need not branch on it — the view is constructed to be
+    exactly what the synchronous engine would present at the same round
+    when the prediction holds, which is what makes confirmed speculation
+    bitwise-identical to the synchronous path. The flag exists for
+    introspection/logging and for policies that want to hedge.
+    """
+
     now: int
     queue: AdmissionQueue
     free_slots: List[int]
     lanes: List[LaneView]
     cost: CostModel
+    speculative: bool = False
 
 
 @dataclasses.dataclass
@@ -196,9 +223,14 @@ class EdfPreemptPolicy(EdfPolicy):
     def _pick_victim(self, view: EngineView, head_slack: float,
                      taken: Sequence[int]) -> Optional[LaneView]:
         """Lowest-value lane: maximum slack (no deadline == inf slack goes
-        first), then least progress (least sunk compute). A victim must have
-        strictly more slack than the head gains — never trade one miss for
-        another — and must not have exhausted its preemption budget."""
+        first), then least sunk compute — ``invested``, i.e. rounds in the
+        current admission PLUS rounds credited from earlier evictions.
+        (Ranking on ``rounds_done`` alone re-victimized freshly re-admitted
+        lanes: a request that had already burned rounds before preemption
+        looked like the least-progressed lane right after re-admission.)
+        A victim must have strictly more slack than the head gains — never
+        trade one miss for another — and must not have exhausted its
+        preemption budget."""
         candidates = [
             ln for ln in view.lanes
             if ln.slot not in taken
@@ -208,7 +240,7 @@ class EdfPreemptPolicy(EdfPolicy):
         if not candidates:
             return None
         return max(candidates,
-                   key=lambda ln: (ln.slack(view.now), -ln.rounds_done))
+                   key=lambda ln: (ln.slack(view.now), -ln.invested))
 
     def decide(self, view: EngineView) -> Decision:
         dec = super().decide(view)  # EDF admissions into naturally free slots

@@ -84,6 +84,13 @@ class AdmissionQueue:
         deadline, seq, and accumulated ``rounds_credit`` are preserved."""
         self._items.append(item)
 
+    def remove(self, item: QueueItem) -> None:
+        """Drop ``item`` (by identity) from the queue — the inverse of
+        :meth:`push`, used when a speculative eviction is rolled back.
+        Ordering is recomputed from item keys at every pop, so push/remove
+        round-trips cannot perturb the pop order of the survivors."""
+        self._items.remove(item)
+
     def effective_class(self, item: QueueItem, now: int) -> int:
         waited = max(0, now - item.submit_round) + item.rounds_credit
         return item.priority + waited // self.aging_rounds

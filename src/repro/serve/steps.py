@@ -45,7 +45,10 @@ def greedy_generate(cfg: ModelConfig, params, prompt, steps: int, max_len: int,
     """prompt: [B, S0] -> [B, S0+steps] greedy tokens (CPU-scale helper)."""
     mod = model_api.get_module(cfg)
     prefill = make_prefill(cfg, max_len, **kw)
-    decode = jax.jit(make_decode_step(cfg))
+    # the KV cache is a carry: each decode step supersedes it, so donate the
+    # buffers instead of holding two generations live (same discipline as
+    # the slot grid's donated SlotState)
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
     logits, cache = prefill(params, prompt)
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     outs = [prompt, tok]

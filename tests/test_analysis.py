@@ -161,7 +161,8 @@ def test_executor_programs_lint_clean_and_stable():
     spec = GridSpec(num_slots=2, num_cores=3, latent_shape=(4,))
     recs = ex.enumerate_programs(
         grid_specs=[spec], migrate_pairs=[(spec, spec)])
-    assert {r.kind for r in recs} == {"round", "admit", "multi", "migrate"}
+    assert {r.kind for r in recs} == {"round", "admit", "multi", "roll",
+                                      "migrate"}
     assert jaxpr_lint.run(recs) == []
     assert trace_check.run(recs) == []
     # enumeration must never touch the serving trace cache

@@ -1,0 +1,309 @@
+"""Async double-buffered engine: the speculation contract suite, plus the
+host-loop accounting regressions fixed alongside it.
+
+The load-bearing contracts:
+
+* **confirmed speculation is invisible** — with exact predictions
+  (``rtol=0``) the overlap engine's outputs, per-request latencies, and
+  deadline stats are bitwise/numerically identical to the synchronous
+  engine on the shared SLA trace under all three policies, while its
+  done-flag readbacks (``host_syncs``) collapse from one-per-round to
+  one-per-completion;
+* **reconciled speculation is bounded** — a mispredicted admit is rolled
+  back (counted), wastes at most one dispatched round per rollback, and
+  the final outputs still match the synchronous engine bit for bit;
+* **admission is transfer-free** — the admit program draws init noise on
+  device from the request keys; a whole admission batch runs under
+  ``jax.transfer_guard_device_to_host("disallow")``;
+* the shrink-hysteresis streak counts device rounds in both host paths
+  (shrink timing invariant to ``max_rounds_on_device``), preemption victim
+  ranking weighs pre-eviction investment, and ``run_until_drained`` does
+  not raise on a legal drain that lands on its budget boundary.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import uniform_tgrid
+from repro.serve import ContinuousEngine, Request
+from repro.serve.sched.cost import CostModel
+from repro.serve.sched.policy import EdfPreemptPolicy, EngineView, LaneView
+from repro.serve.sched.queue import AdmissionQueue, QueueItem
+from repro.serve.sched.workload import (drive, sla_demo_trace,
+                                        sla_engine_kwargs)
+
+N, K = 16, 4
+TG = uniform_tgrid(N, 0.98)
+LAM = jnp.linspace(0.1, 1.5, 4)
+
+
+def _drift(x, t):
+    return -x * LAM
+
+
+def _engine(policy=None, overlap=False, num_slots=2, rtol=0.0, **kw):
+    return ContinuousEngine(_drift, (4,), N, K, TG, num_slots=num_slots,
+                            rtol=rtol, policy=policy, overlap=overlap, **kw)
+
+
+def _same_result(a, b):
+    return (np.array_equal(np.asarray(a.sample), np.asarray(b.sample))
+            and a.rounds_used == b.rounds_used
+            and a.accepted_core == b.accepted_core
+            and a.latency_rounds == b.latency_rounds)
+
+
+# -- tentpole: speculation contract -------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["fifo", "edf", "edf-preempt"])
+def test_confirmed_speculation_bitwise_identical_to_sync(policy):
+    """rtol=0 -> the cost model's done-round is closed-form exact -> every
+    speculative decision is the one the synchronous engine makes at the
+    same round. Outputs, latencies, and deadline stats must be identical;
+    only the host-sync count may (must) drop."""
+    runs = {}
+    for overlap in (False, True):
+        eng = _engine(policy=policy, overlap=overlap, **sla_engine_kwargs(N))
+        reqs, arrivals = sla_demo_trace(N)
+        runs[overlap] = (dict(drive(eng, reqs, arrivals)), eng.stats())
+    sync_out, sync_st = runs[False]
+    ovl_out, ovl_st = runs[True]
+    assert sync_out.keys() == ovl_out.keys()
+    for rid in sync_out:
+        assert _same_result(sync_out[rid], ovl_out[rid]), rid
+    for k in ("deadline_misses", "deadline_total", "preemptions",
+              "rounds_total", "served"):
+        assert sync_st[k] == ovl_st[k], k
+    assert ovl_st["speculation_rollbacks"] == 0
+    assert ovl_st["host_syncs"] < sync_st["host_syncs"]
+    # the whole point: readbacks scale with completions, not rounds
+    assert ovl_st["host_syncs"] <= ovl_st["served"] + \
+        ovl_st["speculations"] + 1
+    assert sync_st["host_syncs"] >= sync_st["rounds_total"] // 2
+
+
+def test_fast_path_reads_nothing_back():
+    """A lone rtol=0 request: the overlap engine must pay exactly ONE
+    done-flag readback (the predicted-due verify), at any amortization."""
+    for r_dev in (1, 8):
+        eng = _engine(overlap=True, num_slots=1)
+        eng.submit(Request(rid=0, key=jax.random.PRNGKey(5)))
+        out = dict(eng.run_until_drained(max_rounds_on_device=r_dev))
+        assert out[0].rounds_used == N
+        assert eng.round_count == N
+        assert eng.host_syncs == 1
+
+
+def test_rollback_bounded_and_bitwise_correct():
+    """Tight rtol>0: the accept only fires at the force-accept round N while
+    the cold-start heuristic predicts the second emission arrival — every
+    speculative re-admission of the slot must be rolled back until the lane
+    really finishes. Wasted rounds are bounded by the prediction error and
+    the served outputs still match the synchronous engine bit for bit."""
+    rtol = 1e-9  # no two consecutive emissions agree this tightly
+
+    def serve(overlap):
+        eng = _engine(overlap=overlap, num_slots=1, rtol=rtol)
+        for rid in (0, 1):
+            eng.submit(Request(rid=rid, key=jax.random.PRNGKey(rid)))
+        return dict(eng.run_until_drained()), eng
+
+    ref, _ = serve(False)
+    out, eng = serve(True)
+    st = eng.stats()
+    for rid in ref:
+        assert _same_result(ref[rid], out[rid]), rid
+    # the cold-start prediction the engine speculated with (post-run the EMA
+    # has been calibrated up to the observed N, so ask a fresh model)
+    cold = CostModel(K, N)
+    pred = cold.predict_rounds(cold.seq_for_level(0), rtol)
+    assert pred < N  # the premise: the heuristic really is optimistic
+    assert st["speculation_rollbacks"] >= 1
+    # each rollback discards at most the one round dispatched ahead, and
+    # rollbacks can only happen on the overdue rounds of each admission
+    assert st["speculated_rounds_wasted"] <= st["speculation_rollbacks"]
+    assert st["speculation_rollbacks"] <= 2 * (N - pred)
+    assert st["rounds_total"] == 2 * N  # wasted rounds never advance the clock
+
+
+def test_round_gap_timer_monotone_and_sane():
+    """The dispatch-gap accounting must be monotone over a run (counters
+    only ever accumulate while busy) and internally consistent."""
+    eng = _engine(overlap=True, num_slots=2)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, key=jax.random.PRNGKey(100 + rid)))
+    prev_count, prev_disp, prev_max = 0, 0, 0.0
+    while len(eng.queue) or eng.has_inflight:
+        eng.step()
+        st = eng.stats()
+        assert st["round_gap_count"] >= prev_count
+        assert st["dispatches"] >= prev_disp
+        assert st["round_gap_max_s"] >= prev_max >= 0.0
+        assert st["round_gap_count"] <= st["dispatches"]
+        if st["round_gap_count"]:
+            assert 0.0 <= st["round_gap_mean_s"] <= st["round_gap_max_s"]
+            assert st["round_gap_p95_s"] <= st["round_gap_max_s"]
+        prev_count, prev_disp = st["round_gap_count"], st["dispatches"]
+        prev_max = st["round_gap_max_s"]
+    assert prev_count > 0
+
+
+# -- satellite: device-side admission noise -----------------------------------
+
+
+def test_admission_batch_is_device_to_host_transfer_free():
+    """Admitting a batch must not read anything back from the device: keys
+    go up, noise is drawn inside the admit program. (It used to pay a
+    jax.random.normal -> np.asarray -> re-upload round-trip per request.)"""
+    eng = _engine(num_slots=4)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, key=jax.random.PRNGKey(200 + rid)))
+    view = EngineView(now=0, queue=eng.queue, free_slots=[0, 1, 2, 3],
+                      lanes=[], cost=eng.cost)
+    dec = eng.policy.decide(view)
+    assert len(dec.admissions) == 4
+    with jax.transfer_guard_device_to_host("disallow"):
+        eng._apply_decision(dec)
+    # and the run it feeds still drains to the usual bits
+    out = dict(eng.run_until_drained())
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(out[r].rounds_used == N for r in out)
+
+
+# -- satellite: victim ranking counts prior investment ------------------------
+
+
+def test_lane_views_count_prior_investment_separately():
+    """After preempt -> re-admit, ``invested`` carries the credited rounds
+    while ``rounds_done``/``est_remaining`` restart with the admission (a
+    re-admitted lane redoes its solve from fresh noise)."""
+    eng = _engine(policy=EdfPreemptPolicy(), num_slots=1)
+    eng.submit(Request(rid=0, key=jax.random.PRNGKey(300)))
+    for _ in range(5):
+        eng.step()
+    assert eng._lane_views()[0].invested == 5
+    # tight deadline: feasible only by evicting A (slack inf) right now
+    eng.submit(Request(rid=1, key=jax.random.PRNGKey(301),
+                       deadline_rounds=N))
+    served = []
+    while len(eng.queue) or eng.has_inflight:
+        served += eng.step()
+        lanes = eng._lane_views()
+        if lanes and lanes[0].item.payload.rid == 0 \
+                and lanes[0].item.rounds_credit:
+            break
+    assert eng.preempted_rids == {0}
+    item = eng._slot_item[0]
+    assert item.payload.rid == 0 and item.rounds_credit == 5
+    ln = eng._lane_views()[0]
+    assert ln.rounds_done == eng.round_count - eng._admit_round[0]
+    assert ln.invested == ln.rounds_done + 5
+    assert ln.est_remaining == max(1, N - ln.rounds_done)  # credit excluded
+
+
+def test_preempt_victim_is_least_invested_not_least_rounds_done():
+    """Regression: lane X was re-admitted after burning 10 rounds
+    (credit=10, rounds_done=2); lane Y is fresh at rounds_done=5. Ranking
+    on rounds_done alone evicted X (the larger total investment)."""
+    cm = CostModel(K, N)
+    pol = EdfPreemptPolicy(max_preemptions=2)
+    q = AdmissionQueue()
+    head = q.submit(payload="head", priority=0, submit_round=0,
+                    deadline_rounds=N, rtol=0.0)
+    assert head is not None
+
+    def lane(slot, credit, preempts, rounds_done):
+        item = QueueItem(payload=f"lane{slot}", priority=0, submit_round=0,
+                         deadline_round=math.inf, seq=100 + slot, rtol=0.0,
+                         rounds_credit=credit, preemptions=preempts)
+        return LaneView(slot=slot, item=item, rounds_done=rounds_done,
+                        est_remaining=N - rounds_done,
+                        invested=rounds_done + credit)
+
+    x, y = lane(0, credit=10, preempts=1, rounds_done=2), \
+        lane(1, credit=0, preempts=0, rounds_done=5)
+    dec = pol.decide(EngineView(now=0, queue=q, free_slots=[],
+                                lanes=[x, y], cost=cm))
+    assert dec.evictions == [1]  # Y: invested 5 < X's 12
+    assert dec.admissions[0].slot == 1
+    assert dec.admissions[0].item is head
+
+
+def test_lane_view_invested_defaults_to_rounds_done():
+    item = QueueItem(payload=None, priority=0, submit_round=0,
+                     deadline_round=math.inf, seq=0)
+    assert LaneView(slot=0, item=item, rounds_done=7,
+                    est_remaining=3).invested == 7
+
+
+# -- satellite: shrink hysteresis in device-round units -----------------------
+
+
+def test_shrink_timing_invariant_to_amortization():
+    """One rtol=0 lane plus one early-exiting aggressive lane on an elastic
+    1..2 grid: after the early exit the survivor sits below the lower
+    bucket. The shrink must land on the same ROUND for any
+    max_rounds_on_device (it used to bank the whole k-round chunk off the
+    single post-drain round)."""
+    H = 5  # H-1 must be a multiple of every r_dev tried (chunk granularity)
+    shrink_rounds, samples = {}, {}
+    for r_dev in (1, 2, 4):
+        eng = _engine(min_slots=1, max_slots=2, resize_hysteresis=H)
+        eng.submit(Request(rid=0, key=jax.random.PRNGKey(400)))  # N rounds
+        eng.submit(Request(rid=1, key=jax.random.PRNGKey(401),
+                           priority=4, rtol=1.0))  # accepts at 2nd emission
+        drained_at, shrunk_at = None, None
+        out = {}
+        while len(eng.queue) or eng.has_inflight:
+            before = eng.round_count  # a shrink fires BEFORE the chunk runs
+            out.update(eng.step(max_rounds_on_device=r_dev))
+            if 1 in out and drained_at is None:
+                drained_at = eng.round_count
+            if eng.stats()["shrinks"] and shrunk_at is None:
+                shrunk_at = before
+        assert eng.stats()["shrinks"] == 1
+        assert shrunk_at is not None and drained_at is not None
+        # streak: 1 at the drain round, +1 per device round after it
+        assert shrunk_at == drained_at + H - 1
+        shrink_rounds[r_dev] = shrunk_at
+        samples[r_dev] = np.asarray(out[0].sample)
+    assert len(set(shrink_rounds.values())) == 1, shrink_rounds
+    # the migrated survivor is bit-identical across amortization factors
+    assert all(np.array_equal(samples[1], s) for s in samples.values())
+
+
+# -- satellite: run_until_drained budget overshoot ----------------------------
+
+
+def test_drain_budget_allows_boundary_landing():
+    """Two sequential rtol=0 requests on S=1 take exactly 2N rounds; a
+    budget of exactly 2N is legal and must NOT raise (the old check fired
+    whenever round_count >= limit after a step, even with nothing left)."""
+    eng = _engine(num_slots=1)
+    for rid in (0, 1):
+        eng.submit(Request(rid=rid, key=jax.random.PRNGKey(500 + rid)))
+    out = dict(eng.run_until_drained(max_rounds=2 * N))
+    assert sorted(out) == [0, 1] and eng.round_count == 2 * N
+
+
+def test_drain_budget_allows_large_r_dev_overshoot():
+    """With a large device-round amortization the final multi step may land
+    on (or past) the budget while finishing the last lane — still legal."""
+    eng = _engine(num_slots=1)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, key=jax.random.PRNGKey(600 + rid)))
+    out = dict(eng.run_until_drained(max_rounds=3 * N,
+                                     max_rounds_on_device=64))
+    assert sorted(out) == [0, 1, 2] and eng.round_count == 3 * N
+
+
+def test_drain_budget_still_guards_real_stalls():
+    eng = _engine(num_slots=1)
+    for rid in (0, 1):
+        eng.submit(Request(rid=rid, key=jax.random.PRNGKey(700 + rid)))
+    with pytest.raises(RuntimeError, match="did not drain"):
+        eng.run_until_drained(max_rounds=N)  # half the work can't fit
