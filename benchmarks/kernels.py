@@ -1,0 +1,289 @@
+"""Roofline report over the Pallas kernel library (``run.py --kernels``).
+
+For each kernel in the library the report cross-checks two independent
+pieces of arithmetic-intensity bookkeeping and then places the kernel on
+the per-backend roofline (``benchmarks.roofline.backend_peaks``):
+
+* **meta** side — derived from the kernel's own ``launch_meta``: bytes are
+  the deduplicated unique block regions per operand across the whole grid
+  (a block revisited by many programs — flash KV, the rmsnorm weight —
+  counts once, exactly the HBM traffic a pipelined pallas_call pays), and
+  FLOPs are the closed-form *useful* operation count at the meta shapes.
+  "Useful" means the algorithm's required work: the ssd kernel's per-head
+  recompute of the [Lc, Lc] C·Bᵀ gram (hoisted per-chunk in the oracle) is
+  deliberately excluded, and the flash case is run NON-causal so the
+  kernel's causal triangle-skip cannot halve its count vs the full-score
+  oracle.
+* **measured** side — independent of any launch metadata: bytes are the
+  concrete operand + output array sizes, FLOPs come from walking the
+  jaxpr of the jnp oracle with a deterministic per-primitive counter
+  (elementwise → output size, reductions → operand size, dot_general →
+  2 · output · contraction).
+
+CI fails the run if the two sides disagree by more than
+``TOLERANCE`` (5%) on either axis — that is the contract that keeps
+``launch_meta`` honest as kernels evolve.
+
+Timing on CPU measures the jitted *oracle* (the path ``use_kernels``
+actually serves on CPU — see kernels/README.md); pallas-interpret runs
+only supply the parity column (max |kernel − oracle|). The achieved
+fraction is ``attainable_s / actual_s`` with
+``attainable_s = max(flops / peak_flops, bytes / peak_bw)``.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Callable, NamedTuple, Tuple
+
+import numpy as np
+
+TOLERANCE = 0.05  # meta vs measured bookkeeping agreement gate
+
+# elementwise primitives: one FLOP per output element
+_ELEMWISE = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "exp", "log", "pow",
+    "integer_pow", "rsqrt", "sqrt", "tanh", "logistic", "erf", "sin", "cos",
+}
+# reductions: one FLOP per *operand* element
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod"}
+
+
+def _subjaxprs(value):
+    """Yield every Jaxpr reachable from one eqn param value."""
+    if hasattr(value, "eqns"):
+        yield value
+    elif hasattr(value, "jaxpr"):
+        yield from _subjaxprs(value.jaxpr)
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def count_jaxpr_flops(jaxpr) -> int:
+    """Deterministic FLOP count of a jaxpr (recursing into sub-jaxprs)."""
+    total = 0
+    for eq in jaxpr.eqns:
+        for v in eq.params.values():
+            for sub in _subjaxprs(v):
+                total += count_jaxpr_flops(sub)
+        name = eq.primitive.name
+        if name in _ELEMWISE:
+            total += int(np.prod(eq.outvars[0].aval.shape, dtype=np.int64))
+        elif name in _REDUCE:
+            total += int(np.prod(eq.invars[0].aval.shape, dtype=np.int64))
+        elif name == "dot_general":
+            (lc, _), _ = eq.params["dimension_numbers"]
+            lshape = eq.invars[0].aval.shape
+            contract = int(np.prod([lshape[i] for i in lc], dtype=np.int64))
+            out = int(np.prod(eq.outvars[0].aval.shape, dtype=np.int64))
+            total += 2 * out * contract
+    return total
+
+
+def measured_flops(ref: Callable, args) -> int:
+    import jax
+
+    return count_jaxpr_flops(jax.make_jaxpr(ref)(*args).jaxpr)
+
+
+def measured_bytes(ref: Callable, args) -> int:
+    import jax
+
+    outs = jax.eval_shape(ref, *args)
+    leaves = list(args) + jax.tree_util.tree_leaves(outs)
+    return sum(int(np.prod(a.shape, dtype=np.int64))
+               * np.dtype(a.dtype).itemsize for a in leaves)
+
+
+def meta_bytes(launch) -> int:
+    """HBM traffic implied by the launch metadata: unique block regions
+    per operand across the grid (revisited blocks count once)."""
+    from repro.analysis.pallas_check import grid_points, region
+
+    points = grid_points(launch.grid)
+    total = 0
+    for meta in tuple(launch.inputs) + tuple(launch.outputs):
+        regions = {region(meta, p) for p in points}
+        item = np.dtype(meta.dtype).itemsize
+        total += item * sum(
+            int(np.prod([e for _, e in r], dtype=np.int64)) for r in regions)
+    return total
+
+
+class BenchCase(NamedTuple):
+    name: str
+    launch: object
+    op: Callable          # pallas path (interpret mode on CPU) — parity only
+    ref: Callable         # jnp oracle — timed, jaxpr-counted
+    args: Tuple
+    meta_flops: int       # closed-form useful FLOPs at the meta shapes
+    parity_contract: str  # "bitwise" (shared-oracle dispatch) or "tolerance"
+
+
+def bench_cases():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.kernel import flash_attention
+    from repro.kernels.flash_attention.kernel import (
+        launch_meta as flash_meta)
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.rectify.kernel import (fused_step_rectify,
+                                              fused_step_rectify_accept,
+                                              launch_meta as rect_meta,
+                                              launch_meta_accept)
+    from repro.kernels.rectify.ref import (fused_step_rectify_accept_ref,
+                                           fused_step_rectify_ref)
+    from repro.kernels.rmsnorm.kernel import launch_meta as rms_meta
+    from repro.kernels.rmsnorm.kernel import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    from repro.kernels.ssd_scan.kernel import launch_meta as ssd_meta
+    from repro.kernels.ssd_scan.kernel import ssd_chunk
+    from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+
+    keys = iter(jax.random.split(jax.random.PRNGKey(0), 32))
+    rnd = lambda *s: jax.random.normal(next(keys), s, jnp.float32)
+    cases = []
+
+    # flash attention — NON-causal so kernel FLOPs == full-score oracle
+    b, sq, h, dh, sk, kvh, bq, bk = 2, 256, 4, 64, 256, 2, 128, 128
+    fl_flops = (4 * b * h * sq * sk * dh      # the two dots
+                + 5 * b * h * sq * sk         # softmax (max,sub,exp,sum,div)
+                + b * sq * h * dh)            # q pre-scale
+    cases.append(BenchCase(
+        "flash_attention", flash_meta(b, sq, h, dh, sk, kvh, bq, bk),
+        functools.partial(flash_attention, causal=False, bq=bq, bk=bk,
+                          interpret=True),
+        functools.partial(attention_ref, causal=False),
+        (rnd(b, sq, h, dh), rnd(b, sk, kvh, dh), rnd(b, sk, kvh, dh)),
+        fl_flops, "tolerance"))
+
+    rows, d = 512, 128
+    cases.append(BenchCase(
+        "rmsnorm", rms_meta(rows, d),
+        functools.partial(rmsnorm, interpret=True), rmsnorm_ref,
+        (rnd(rows, d), rnd(d)),
+        4 * rows * d + 3 * rows, "tolerance"))
+
+    g, hh, lc, n, hd = 4, 2, 256, 64, 64
+    ssd_flops = (2 * g * lc * lc * n          # C·Bᵀ gram, once per chunk
+                 + 2 * g * hh * lc * lc * hd  # (G∘M)·Xdt
+                 + 2 * g * hh * hd * lc * n   # local-state outer product
+                 + 3 * g * hh * lc * lc       # dlog sub, exp, mask mul
+                 + g * hh * lc * hd           # xdt·w scale
+                 + 2 * g * hh * lc)           # chunk-final decay sub+exp
+    cum = jnp.cumsum(-jnp.abs(rnd(g, hh, lc)) * 0.05, axis=-1)
+    ref_b = jax.vmap(jax.vmap(ssd_chunk_ref, in_axes=(None, None, 0, 0)),
+                     in_axes=(0, 0, 0, 0))
+    cases.append(BenchCase(
+        "ssd_scan", ssd_meta(g, hh, lc, n, hd),
+        functools.partial(ssd_chunk, interpret=True), ref_b,
+        (rnd(g, lc, n), rnd(g, lc, n), rnd(g, hh, lc, hd), cum),
+        ssd_flops, "tolerance"))
+
+    k, m = 4, 8192
+    lat = lambda: rnd(k, m)
+    dt = jnp.full((k,), 0.05, jnp.float32)
+    fire = jnp.array([True, False, True, True])
+    rect_args = (lat(), lat(), lat(), lat(), lat(), lat(), dt, dt, fire)
+    cases.append(BenchCase(
+        "rectify", rect_meta(k, m),
+        functools.partial(fused_step_rectify, interpret=True),
+        fused_step_rectify_ref, rect_args,
+        7 * k * m, "bitwise"))
+
+    acc_args = rect_args[:6] + (lat(),) + rect_args[6:]
+    cases.append(BenchCase(
+        "rectify_accept", launch_meta_accept(k, m),
+        functools.partial(fused_step_rectify_accept, interpret=True),
+        fused_step_rectify_accept_ref, acc_args,
+        12 * k * m, "bitwise"))
+    return cases
+
+
+def _max_abs_err(a, b) -> float:
+    import jax
+
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return max(float(np.max(np.abs(np.asarray(x, np.float64)
+                                   - np.asarray(y, np.float64))))
+               for x, y in zip(la, lb))
+
+
+def bench_one(case: BenchCase, peaks: dict) -> dict:
+    import jax
+
+    from benchmarks.common import time_call
+
+    mb, mf = meta_bytes(case.launch), case.meta_flops
+    rb, rf = measured_bytes(case.ref, case.args), \
+        measured_flops(case.ref, case.args)
+    bytes_err = abs(mb - rb) / rb
+    flops_err = abs(mf - rf) / rf
+    ok = bytes_err <= TOLERANCE and flops_err <= TOLERANCE
+
+    actual_s, ref_out = time_call(jax.jit(case.ref), *case.args)
+    parity = _max_abs_err(case.op(*case.args), ref_out)
+
+    t_comp = rf / peaks["flops"]
+    t_mem = rb / peaks["bw"]
+    attainable_s = max(t_comp, t_mem)
+    return {
+        "kernel": case.launch.kernel,
+        "grid": list(case.launch.grid),
+        "meta_bytes": mb, "measured_bytes": rb,
+        "meta_flops": mf, "measured_flops": rf,
+        "bytes_rel_err": bytes_err, "flops_rel_err": flops_err,
+        "bookkeeping_ok": ok,
+        "intensity_flops_per_byte": rf / rb,
+        "actual_s": actual_s,
+        "attainable_s": attainable_s,
+        "fraction_of_roofline": attainable_s / actual_s,
+        "bottleneck": "compute" if t_comp >= t_mem else "memory",
+        "parity": {"contract": case.parity_contract,
+                   "max_abs_err_interpret_vs_oracle": parity},
+    }
+
+
+def kernels_report(out_path: str = None) -> dict:
+    import jax
+
+    from benchmarks.common import RESULTS_DIR
+    from benchmarks.roofline import backend_peaks
+
+    backend = jax.default_backend()
+    peaks = backend_peaks(backend)
+    report = {"backend": backend, "peaks": peaks, "tolerance": TOLERANCE,
+              "kernels": {}}
+    for case in bench_cases():
+        cell = bench_one(case, peaks)
+        report["kernels"][case.name] = cell
+        print(f"kernels[{case.name}],bytes={cell['measured_bytes']},"
+              f"flops={cell['measured_flops']},"
+              f"ai={cell['intensity_flops_per_byte']:.2f},"
+              f"bound={cell['bottleneck']},"
+              f"roofl={100 * cell['fraction_of_roofline']:.2f}%,"
+              f"parity={cell['parity']['max_abs_err_interpret_vs_oracle']:.2e},"
+              f"bookkeeping={'OK' if cell['bookkeeping_ok'] else 'FAIL'}"
+              f"(b={100 * cell['bytes_rel_err']:.2f}%,"
+              f"f={100 * cell['flops_rel_err']:.2f}%)")
+    report["ok"] = all(c["bookkeeping_ok"]
+                       for c in report["kernels"].values())
+    out_path = out_path or os.path.join(RESULTS_DIR, "kernel_roofline.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    print(f"kernel_roofline: {out_path}")
+    if not report["ok"]:
+        bad = [k for k, c in report["kernels"].items()
+               if not c["bookkeeping_ok"]]
+        raise SystemExit(
+            f"kernels: launch_meta bookkeeping disagrees with measured "
+            f"bytes/FLOPs by >{100 * TOLERANCE:.0f}% for: {', '.join(bad)}")
+    return report
+
+
+if __name__ == "__main__":
+    kernels_report()

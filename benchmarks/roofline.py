@@ -10,9 +10,52 @@ from __future__ import annotations
 import glob
 import json
 import os
+import warnings
 
 RESULTS = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                        "results", "dryrun")
+
+# Per-backend hardware ceilings (peak dense FLOP/s, peak HBM/DRAM bytes/s).
+# The numbers are nominal single-chip specs: TPU is a v5p-class part (the
+# 197 TF/s the dry-run roofline historically hardcoded for every backend),
+# GPU an 80GB HBM3 part, CPU an AVX-512 server socket with DDR5. All are
+# overridable — REPRO_PEAK_FLOPS / REPRO_PEAK_BW (floats, applied to
+# whatever backend is selected) or the explicit ``peaks=`` argument — so a
+# measured machine ceiling always beats the table. Shared by the dry-run
+# roofline below and ``benchmarks/run.py --kernels`` (benchmarks/kernels.py).
+PEAKS = {
+    "tpu": {"flops": 197e12, "bw": 1.2e12},
+    "gpu": {"flops": 67e12, "bw": 2.0e12},
+    "cpu": {"flops": 1.5e12, "bw": 1.0e11},
+}
+DEFAULT_BACKEND = "tpu"  # what the dry-run JSONs historically assumed
+
+
+def backend_peaks(backend: str = None, peaks: dict = None) -> dict:
+    """Resolve {flops, bw} for ``backend`` with env-var overrides.
+
+    Unknown backends warn and fall back to the TPU column instead of
+    silently assuming it (the failure mode of the old hardcoded 197e12).
+    """
+    if peaks is None:
+        backend = (backend or DEFAULT_BACKEND).lower()
+        if backend not in PEAKS:
+            warnings.warn(
+                f"unknown backend {backend!r}: no peak table entry, "
+                f"falling back to {DEFAULT_BACKEND} ceilings "
+                f"(override with REPRO_PEAK_FLOPS/REPRO_PEAK_BW)",
+                stacklevel=2)
+            backend = DEFAULT_BACKEND
+        peaks = dict(PEAKS[backend])
+    else:
+        peaks = dict(peaks)
+    env_f = os.environ.get("REPRO_PEAK_FLOPS")
+    env_b = os.environ.get("REPRO_PEAK_BW")
+    if env_f:
+        peaks["flops"] = float(env_f)
+    if env_b:
+        peaks["bw"] = float(env_b)
+    return peaks
 
 
 def load_cells(pattern="*.json"):
@@ -25,10 +68,16 @@ def load_cells(pattern="*.json"):
     return cells
 
 
-def fraction_of_roofline(cell) -> float:
+def fraction_of_roofline(cell, backend: str = None) -> float:
     """useful compute time / bound time: how close the compiled step is to
-    the ideal (pure model-FLOPs at peak) given its dominant bottleneck."""
-    ideal = cell["model_flops"] / cell["chips"] / 197e12
+    the ideal (pure model-FLOPs at peak) given its dominant bottleneck.
+
+    The peak comes from the per-backend table (``backend_peaks``) — the
+    cell's own ``backend`` field wins, then the ``backend`` argument, then
+    the TPU default the dry-run pipeline has always assumed.
+    """
+    peak = backend_peaks(cell.get("backend") or backend)["flops"]
+    ideal = cell["model_flops"] / cell["chips"] / peak
     bound = cell["roofline"]["bound_s"]
     return ideal / bound if bound > 0 else 0.0
 

@@ -26,6 +26,13 @@ speculation rollbacks on the deterministic rtol=0 trace, host syncs
 strictly below the synchronous elastic run, a busy-grid round gap of ~0,
 and bitwise-identical samples. Stats land in results/serve_burst.json
 (CI artifact).
+
+``--kernels`` runs the Pallas kernel-library roofline report
+(``benchmarks.kernels``): per kernel, launch_meta-derived bytes/FLOPs
+cross-checked against an independent jaxpr-walk measurement (>5%
+disagreement fails the run), interpret-vs-oracle parity, and achieved
+fraction of the per-backend roofline. Writes results/kernel_roofline.json
+(CI artifact).
 """
 from __future__ import annotations
 
@@ -213,6 +220,11 @@ def serve_burst() -> dict:
 
 
 def main() -> None:
+    if "--kernels" in sys.argv:
+        from benchmarks.kernels import kernels_report
+        kernels_report()
+        print("kernels,OK")
+        return
     if "--serve-smoke" in sys.argv:
         serve_smoke()
         print("serve_smoke,OK")

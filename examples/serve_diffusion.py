@@ -26,6 +26,11 @@ capacity for the continuous engine (power-of-two bucket ladder, sustained-
 occupancy shrink hysteresis); leaving them unset — or setting
 ``min == max`` — is bit-for-bit the fixed-S engine.
 
+``--use-kernels`` serves both engines through the fused Pallas
+step+rectify+accept round (``repro.kernels.rectify``); on CPU the kernel
+dispatches to its jnp oracle, so every output stays bitwise identical —
+the printed kernel path confirms which implementation ran.
+
   PYTHONPATH=src python examples/serve_diffusion.py --requests 12 --cores 8
   PYTHONPATH=src python examples/serve_diffusion.py --sla --policy edf-preempt
   PYTHONPATH=src python examples/serve_diffusion.py --min-slots 1 --max-slots 8
@@ -149,6 +154,10 @@ def main():
                     help="elastic capacity ceiling for the continuous engine")
     ap.add_argument("--resize-hysteresis", type=int, default=8,
                     help="sustained-low-occupancy rounds before a shrink")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="serve rounds through the fused Pallas "
+                         "step+rectify+accept kernel (bitwise-identical "
+                         "on CPU, where it dispatches to its jnp oracle)")
     args = ap.parse_args()
 
     gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=6,
@@ -162,7 +171,8 @@ def main():
     static = ChordsEngine(gm.drift, latent_shape=tuple(args.latent),
                           n_steps=args.steps, num_cores=args.cores,
                           tgrid=tgrid, max_batch=args.max_batch,
-                          rtol=args.rtol)
+                          rtol=args.rtol,
+                          use_kernel=args.use_kernels or None)
     static_out, static_rounds = serve_static(static, reqs, arrivals)
 
     cont = ContinuousEngine(gm.drift, latent_shape=tuple(args.latent),
@@ -171,7 +181,8 @@ def main():
                             rtol=args.rtol, policy=args.policy,
                             min_slots=args.min_slots,
                             max_slots=args.max_slots,
-                            resize_hysteresis=args.resize_hysteresis)
+                            resize_hysteresis=args.resize_hysteresis,
+                            use_kernel=args.use_kernels or None)
     cont_out, cont_rounds = serve_continuous(cont, reqs, arrivals)
 
     for rid, out in sorted(cont_out.items()):
@@ -191,6 +202,7 @@ def main():
           f"(max |static - continuous| = {worst:.2e})")
 
     st = cont.stats()
+    print(f"[serve] kernel path: {st['kernel_path']}")
     print(f"[serve] static batching : {static_rounds} rounds to drain "
           f"{args.requests} requests")
     print(f"[serve] continuous      : {cont_rounds} rounds to drain "

@@ -3,7 +3,7 @@
 One place defines WHAT gets checked so the CLI, the tests, and CI all lint
 the same thing: the full bucket ladder a ``ContinuousEngine`` walks
 (``engine.bucket_ladder``), the batch streaming program, lane migration
-between adjacent buckets, and the four Pallas kernel launches at
+between adjacent buckets, and the five Pallas kernel launches at
 representative shapes. The drift is the analytic ``-x * t`` used across
 the test suite — program *structure* (what the passes inspect) does not
 depend on the drift's weights, so linting the analytic surface covers the
@@ -93,8 +93,11 @@ def kernel_cases() -> List[KernelCase]:
     from repro.kernels.flash_attention.kernel import flash_attention
     from repro.kernels.flash_attention.ref import attention_ref
     from repro.kernels.rectify.kernel import (fused_step_rectify,
-                                              launch_meta as rect_meta)
-    from repro.kernels.rectify.ref import fused_step_rectify_ref
+                                              fused_step_rectify_accept,
+                                              launch_meta as rect_meta,
+                                              launch_meta_accept)
+    from repro.kernels.rectify.ref import (fused_step_rectify_accept_ref,
+                                           fused_step_rectify_ref)
     from repro.kernels.rmsnorm.kernel import (launch_meta as rms_meta,
                                               rmsnorm)
     from repro.kernels.rmsnorm.ref import rmsnorm_ref
@@ -134,4 +137,11 @@ def kernel_cases() -> List[KernelCase]:
     cases.append(KernelCase(
         "rectify", rect_meta(k, m),
         fused_step_rectify, fused_step_rectify_ref, rect_args, rect_args))
+
+    acc_args = tuple([f32(k, m)] * 7) + (
+        f32(k), f32(k), jax.ShapeDtypeStruct((k,), jnp.bool_))
+    cases.append(KernelCase(
+        "rectify_accept", launch_meta_accept(k, m),
+        fused_step_rectify_accept, fused_step_rectify_accept_ref,
+        acc_args, acc_args))
     return cases

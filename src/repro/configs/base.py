@@ -61,6 +61,19 @@ class ModelConfig:
     # numerics
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
+    # kernels: dispatch rmsnorm / attention / ssd-scan through the Pallas
+    # kernel library (repro.kernels.{rmsnorm,flash_attention,ssd_scan}).
+    #   False       -> plain jnp paths (the default everywhere)
+    #   True        -> real kernels when kernel_interpret=False (TPU); on
+    #                  CPU (kernel_interpret=True) the flag is
+    #                  bitwise-neutral — the jnp path runs, same jaxpr as
+    #                  False, mirroring the rectify step_rectify wiring
+    #   "interpret" -> pl.pallas_call(interpret=True): CPU-executable kernel
+    #                  bodies for parity tests / roofline (tolerance, not
+    #                  bitwise — see kernels/README.md); never a serving
+    #                  default
+    use_kernels: object = False
+    kernel_interpret: bool = True
     # notes for DESIGN.md / provenance
     source: str = ""
 

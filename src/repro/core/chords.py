@@ -82,8 +82,21 @@ def accept_test(out, prev, rtol, batch_ndim: int = 0):
     return num / den < rtol
 
 
+def accept_from_sums(err_sq, out_sq, rtol):
+    """:func:`accept_test` evaluated from its pre-reduced sums.
+
+    ``err_sq = sum((out - prev)**2)`` and ``out_sq = sum(out * out)`` over
+    the latent axes — exactly what the fused step+rectify+accept kernel
+    reduces in VMEM (``repro.kernels.rectify``). The sqrt/divide/compare
+    tail here is op-for-op the tail of ``accept_test``, so the fused accept
+    decision is bit-identical to the unfused one whenever the sums are.
+    """
+    return jnp.sqrt(err_sq) / (jnp.sqrt(out_sq) + 1e-12) < rtol
+
+
 def _make_round_step(drift: DriftFn, tgrid, n: int, k: int,
-                     use_kernel: bool = False, kernel_interpret: bool = True):
+                     use_kernel: bool = False, kernel_interpret: bool = True,
+                     fuse_accept: bool = False):
     """One lockstep round over a single [K, ...] core grid.
 
     Returns ``step(carry, i_arr, r) -> (carry, emitted)`` with ``i_arr`` a
@@ -103,11 +116,20 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int,
     ``repro.kernels.rectify.ops`` for why the Pallas interpreter itself
     cannot give that guarantee). On a TPU target pass
     ``kernel_interpret=False`` to engage the real Pallas lowering.
+
+    ``fuse_accept`` additionally fuses the rtol accept reduction into the
+    same pass: the step takes an extra ``prev`` operand (the lane's previous
+    streamed output, latent-shaped — broadcast over cores here) and returns
+    ``(carry, (emitted, err_sq, out_sq))`` with ``err_sq/out_sq`` the [K]
+    per-core numerator/denominator sums of :func:`accept_test`, reduced
+    in-kernel so no full-latent error array ever materializes between the
+    solver step and the accept decision (:func:`accept_from_sums` finishes
+    the comparison on scalars).
     """
-    from repro.kernels.rectify.ops import step_rectify
+    from repro.kernels.rectify.ops import step_rectify, step_rectify_accept
     vdrift = vmap_logical(drift, "cores", in_axes=(0, 0))
 
-    def step(carry: ChordsCarry, i_arr, r):
+    def _common(carry: ChordsCarry, i_arr, r):
         x, x_snap, f_snap, p, finals = carry
         cur, nxt = scheduler.positions(i_arr, r)
         alive = cur <= n - 1
@@ -127,7 +149,20 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int,
         k0 = jnp.arange(k)
         fire = (k0 > 0) & (cur_up == p) & alive
         t_p = tgrid[jnp.clip(p, 0, n)]
+        return (x, x_snap, f_snap, p, finals, f, x_up, f_up,
+                nxt, alive, fire, t_cur, t_nxt, t_p)
 
+    def _finish(x, x_new, x_snap, f_snap, p, finals, nxt, alive, fire):
+        x_snap = jnp.where(bmask(fire, x_new), x_new, x_snap)
+        p = jnp.where(fire, nxt, p)
+        x = jnp.where(bmask(alive, x_new), x_new, x)
+        emitted = (nxt == n) & alive
+        finals = jnp.where(bmask(emitted, x), x, finals)
+        return ChordsCarry(x, x_snap, f_snap, p, finals), emitted
+
+    def step(carry: ChordsCarry, i_arr, r):
+        (x, x_snap, f_snap, p, finals, f, x_up, f_up,
+         nxt, alive, fire, t_cur, t_nxt, t_p) = _common(carry, i_arr, r)
         # both flag values flow through step_rectify so they share one jaxpr
         # on CPU (interpret): the fused update (solver step + rectify_delta
         # rectification) either as the Pallas kernel or as its jnp oracle
@@ -135,15 +170,21 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int,
                              t_nxt - t_cur, t_nxt - t_p, fire,
                              use_kernel=use_kernel,
                              interpret=kernel_interpret)
-        x_snap = jnp.where(bmask(fire, x_new), x_new, x_snap)
-        p = jnp.where(fire, nxt, p)
-        x = jnp.where(bmask(alive, x_new), x_new, x)
+        return _finish(x, x_new, x_snap, f_snap, p, finals, nxt, alive, fire)
 
-        emitted = (nxt == n) & alive
-        finals = jnp.where(bmask(emitted, x), x, finals)
-        return ChordsCarry(x, x_snap, f_snap, p, finals), emitted
+    def step_accept(carry: ChordsCarry, i_arr, r, prev):
+        (x, x_snap, f_snap, p, finals, f, x_up, f_up,
+         nxt, alive, fire, t_cur, t_nxt, t_p) = _common(carry, i_arr, r)
+        prev_k = jnp.broadcast_to(prev[None], x.shape).astype(x.dtype)
+        x_new, err_sq, out_sq = step_rectify_accept(
+            x, f, x_up, f_up, x_snap, f_snap, prev_k,
+            t_nxt - t_cur, t_nxt - t_p, fire,
+            use_kernel=use_kernel, interpret=kernel_interpret)
+        new_carry, emitted = _finish(x, x_new, x_snap, f_snap, p, finals,
+                                     nxt, alive, fire)
+        return new_carry, (emitted, err_sq, out_sq)
 
-    return step
+    return step_accept if fuse_accept else step
 
 
 def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
@@ -164,7 +205,8 @@ def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
 
 def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int,
                          use_kernel: bool = False,
-                         kernel_interpret: bool = True):
+                         kernel_interpret: bool = True,
+                         fuse_accept: bool = False):
     """One lockstep round over a fixed [S, K, ...] slot×core grid.
 
     Each slot is an independent request lane with its own init sequence
@@ -178,9 +220,33 @@ def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int,
 
     Returns ``slot_round(carry, i_arr, r, live) -> (carry, emitted)`` with
     ``emitted`` a [S, K] bool of cores that reached t=1 this round.
+
+    With ``fuse_accept`` the signature becomes
+    ``slot_round(carry, i_arr, r, live, prev) -> (carry, emitted, err_sq,
+    out_sq)``: ``prev`` is the [S, ...] previous streamed output per lane and
+    ``err_sq/out_sq`` are [S, K] accept-reduction sums produced inside the
+    fused kernel pass (see :func:`accept_from_sums`). Dead-lane sums carry
+    whatever the frozen garbage latents reduce to (possibly NaN) — callers
+    gate the accept decision on ``emitted``/``live``/``has_last`` masks, so
+    those values never escape.
     """
     step = _make_round_step(drift, tgrid, n, k, use_kernel=use_kernel,
-                            kernel_interpret=kernel_interpret)
+                            kernel_interpret=kernel_interpret,
+                            fuse_accept=fuse_accept)
+
+    if fuse_accept:
+        vstep = vmap_logical(step, "slots", in_axes=(0, 0, 0, 0))
+
+        def slot_round_accept(carry: ChordsCarry, i_arr, r, live, prev):
+            new_carry, (emitted, err_sq, out_sq) = vstep(carry, i_arr, r,
+                                                         prev)
+            frozen = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(bmask(live, new), new, old),
+                new_carry, carry)
+            return frozen, emitted & live[:, None], err_sq, out_sq
+
+        return slot_round_accept
+
     vstep = vmap_logical(step, "slots", in_axes=(0, 0, 0))
 
     def slot_round(carry: ChordsCarry, i_arr, r, live):

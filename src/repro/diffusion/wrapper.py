@@ -5,6 +5,14 @@ sinusoidal time embedding (MLP'd) added to every position, backbone run
 non-causally in hidden mode, out-proj back to the latent dim. The wrapped
 drift is velocity-prediction under rectified flow, so CHORDS/Euler on it is
 exactly the paper's Flux/SD3 setting.
+
+Kernel plumbing: the ``cfg`` captured by :func:`make_drift` carries
+``use_kernels``/``kernel_interpret`` (``repro.configs.base.ModelConfig``),
+so a drift built from ``cfg.replace(use_kernels=True)`` dispatches the
+backbone's rmsnorm / attention / ssd-scan through the Pallas kernel library
+everywhere this closure is called — ``make_slot_round_body`` →
+``RoundExecutor`` → the serve engines — with no extra arguments threaded
+through the sampler stack (see kernels/README.md).
 """
 from __future__ import annotations
 

@@ -9,3 +9,26 @@ the exact tiling the kernel launches with — see
 ``src/repro/analysis/README.md`` for the pass inventory.
 """
 from repro.kernels.meta import BlockMeta, KernelLaunch, block_specs  # noqa: F401
+
+
+def resolve_kernel_mode(use_kernels, kernel_interpret: bool = True):
+    """Resolve ``ModelConfig.use_kernels``/``kernel_interpret`` to a dispatch.
+
+    Returns ``None`` for the plain-jnp path, else the ``interpret=`` value
+    for the ``pl.pallas_call``:
+
+    * ``False``                          -> ``None`` (jnp)
+    * ``True`` + ``kernel_interpret=True``  -> ``None`` (jnp) — the
+      bitwise-neutral CPU contract: on an interpret-only host, flipping
+      ``use_kernels`` must never change an output bit, so the jnp oracle
+      serves (exactly the ``step_rectify`` wiring; see kernels/README.md)
+    * ``True`` + ``kernel_interpret=False`` -> ``False`` (real Pallas; TPU)
+    * ``"interpret"``                    -> ``True`` (Pallas interpreter —
+      CPU-executable kernel bodies for parity tests and the roofline
+      benchmark; tolerance-level parity, never a serving default)
+    """
+    if use_kernels == "interpret":
+        return True
+    if use_kernels and not kernel_interpret:
+        return False
+    return None

@@ -1,10 +1,18 @@
-"""Pallas TPU kernel: fused CHORDS solver-step + rectification.
+"""Pallas TPU kernel: fused CHORDS solver-step + rectification (+ accept).
 
 Six latent-sized operands are combined in ONE VMEM pass
 (x + dt*f + fire*(dsnap*(f_up - f_snap) + x_up - x_snap)), versus ~4 extra HBM
 round-trips of the latent if composed from separate XLA ops. Latents are tiled
 (1 core, BLOCK_M elements) so each tile's working set (6 * BLOCK_M * 4B ~ 3MB
 at the default) fits VMEM; per-core scalars ride along as [K, 1] blocks.
+
+``fused_step_rectify_accept`` extends the same pass with the serve layer's
+rtol accept reduction (``core.chords.accept_test`` numerator/denominator):
+each grid program also reduces its tile's squared error against the slot's
+previous streamed output and its squared magnitude to a (1, 1) partial —
+the reduction never leaves VMEM, and the accept decision downstream consumes
+only the tiny [K, M/BLOCK_M] partial grids (summed to [K] scalars by the
+wrapper), not a full-latent error array.
 """
 from __future__ import annotations
 
@@ -82,3 +90,93 @@ def fused_step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
       dt[:, None].astype(x.dtype), dsnap[:, None].astype(x.dtype),
       fire[:, None].astype(jnp.int32))
     return out[:, :m] if pad else out
+
+
+def launch_meta_accept(k: int, m: int, dtype="float32",
+                       block_m: int = BLOCK_M) -> KernelLaunch:
+    """Static launch description for ``fused_step_rectify_accept``.
+
+    Same tiling as ``launch_meta`` plus a seventh latent operand (``prev``,
+    the slot's previous streamed output) and two per-(core, tile) scalar
+    partial outputs: err_part[i, j] = sum((out - prev)**2) over tile j and
+    osq_part[i, j] = sum(out * out). Each grid program owns its own (1, 1)
+    partial block — no two programs share an output block, so the reduction
+    is race-free by construction (checked by ``pallas_check``); the final
+    sum over j happens on [K, M/bm] scalars in the wrapper, never on a
+    full-latent error array.
+    """
+    bm = min(block_m, m)
+    nb = m // bm
+    grid = (k, nb)
+    lat_map = lambda i, j: (i, j)
+    scal_map = lambda i, j: (i, 0)
+    part_map = lambda i, j: (i, j)
+    dtype = str(jnp.dtype(dtype))
+    lat = [BlockMeta(name, (1, bm), lat_map, (k, m), dtype)
+           for name in _LATENTS + ("prev",)]
+    scal = [BlockMeta(name, (1, 1), scal_map, (k, 1),
+                      "int32" if name == "fire" else dtype)
+            for name in _SCALARS]
+    out = BlockMeta("out", (1, bm), lat_map, (k, m), dtype)
+    err = BlockMeta("err_part", (1, 1), part_map, (k, nb), dtype)
+    osq = BlockMeta("osq_part", (1, 1), part_map, (k, nb), dtype)
+    return KernelLaunch("rectify.fused_step_rectify_accept", grid,
+                        tuple(lat + scal), (out, err, osq))
+
+
+def _accept_kernel(x_ref, f_ref, xu_ref, fu_ref, xs_ref, fs_ref, prev_ref,
+                   dt_ref, ds_ref, fire_ref, o_ref, err_ref, osq_ref):
+    dt = dt_ref[0, 0]
+    ds = ds_ref[0, 0]
+    fire = fire_ref[0, 0]
+    x = x_ref[...]
+    delta = dt * f_ref[...]
+    rect = ds * (fu_ref[...] - fs_ref[...]) + (xu_ref[...] - xs_ref[...])
+    o = x + (delta + jnp.where(fire != 0, rect, 0.0))
+    o_ref[...] = o
+    # accept reduction in VMEM: numerator/denominator partials mirror
+    # core.chords.accept_test's exact ops ((out - prev)**2 vs out * out)
+    e = o - prev_ref[...]
+    err_ref[0, 0] = jnp.sum(e * e)
+    osq_ref[0, 0] = jnp.sum(o * o)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fused_step_rectify_accept(x, f, x_up, f_up, x_snap, f_snap, prev,
+                              dt, dsnap, fire,
+                              block_m: int = BLOCK_M, interpret: bool = True):
+    """Fused step+rectify with the accept reduction computed in-kernel.
+
+    x..., prev: [K, M]; dt/dsnap: [K] f32; fire: [K] bool.
+    Returns (out [K, M], err_sq [K], out_sq [K]) where
+    err_sq = sum((out - prev)**2, axis=1) and out_sq = sum(out**2, axis=1) —
+    the numerator/denominator of ``core.chords.accept_test`` before the
+    sqrt/divide. Zero padding contributes 0 to both sums (prev is padded
+    with the same zeros as x).
+    """
+    k, m = x.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)))
+        x, f, x_up, f_up, x_snap, f_snap, prev = map(
+            padf, (x, f, x_up, f_up, x_snap, f_snap, prev))
+    mp = x.shape[1]
+    nb = mp // bm
+    meta = launch_meta_accept(k, mp, dtype=x.dtype, block_m=bm)
+    out, err_part, osq_part = pl.pallas_call(
+        _accept_kernel,
+        grid=meta.grid,
+        in_specs=block_specs(meta.inputs),
+        out_specs=tuple(block_specs(meta.outputs)),
+        out_shape=(
+            jax.ShapeDtypeStruct((k, mp), x.dtype),
+            jax.ShapeDtypeStruct((k, nb), x.dtype),
+            jax.ShapeDtypeStruct((k, nb), x.dtype),
+        ),
+        interpret=interpret,
+    )(x, f, x_up, f_up, x_snap, f_snap, prev,
+      dt[:, None].astype(x.dtype), dsnap[:, None].astype(x.dtype),
+      fire[:, None].astype(jnp.int32))
+    return ((out[:, :m] if pad else out),
+            err_part.sum(axis=1), osq_part.sum(axis=1))

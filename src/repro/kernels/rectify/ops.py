@@ -17,8 +17,10 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.rectify.kernel import fused_step_rectify
-from repro.kernels.rectify.ref import fused_step_rectify_ref
+from repro.kernels.rectify.kernel import (fused_step_rectify,
+                                          fused_step_rectify_accept)
+from repro.kernels.rectify.ref import (fused_step_rectify_accept_ref,
+                                       fused_step_rectify_ref)
 
 
 def step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
@@ -33,3 +35,25 @@ def step_rectify(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire,
     else:
         out = fused_step_rectify_ref(*args, dt, dsnap, fire)
     return out.reshape(shape)
+
+
+def step_rectify_accept(x, f, x_up, f_up, x_snap, f_snap, prev,
+                        dt, dsnap, fire,
+                        use_kernel: bool = True, interpret: bool = True):
+    """Fused step+rectify+accept entry (latents [K, ...], prev [K, ...]).
+
+    Returns (x_new [K, ...], err_sq [K], out_sq [K]) — the accept
+    reduction stays in-kernel on TPU (``interpret=False``) and runs as the
+    bitwise-neutral jnp oracle otherwise, exactly like ``step_rectify``.
+    """
+    k = x.shape[0]
+    shape = x.shape
+    flat = lambda a: a.reshape(k, -1)
+    args = tuple(map(flat, (x, f, x_up, f_up, x_snap, f_snap, prev)))
+    if use_kernel and not interpret:
+        out, err_sq, out_sq = fused_step_rectify_accept(
+            *args, dt, dsnap, fire, interpret=False)
+    else:
+        out, err_sq, out_sq = fused_step_rectify_accept_ref(
+            *args, dt, dsnap, fire)
+    return out.reshape(shape), err_sq, out_sq

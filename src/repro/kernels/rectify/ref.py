@@ -25,3 +25,21 @@ def fused_step_rectify_ref(x, f, x_up, f_up, x_snap, f_snap, dt, dsnap, fire):
     delta = dt[:, None] * f
     rect = rectify_delta(x_up, f_up, x_snap, f_snap, dsnap[:, None])
     return x + (delta + jnp.where(fire[:, None], rect, 0.0))
+
+
+def fused_step_rectify_accept_ref(x, f, x_up, f_up, x_snap, f_snap, prev,
+                                  dt, dsnap, fire):
+    """Fused update + the accept reduction of ``core.chords.accept_test``.
+
+    prev: [K, M] previous streamed output broadcast per core. Returns
+    (x_new [K, M], err_sq [K], out_sq [K]); err_sq/out_sq mirror
+    accept_test's numerator/denominator op for op — ``(out - prev) ** 2``
+    (integer_pow) for the error, ``out * out`` (mul) for the magnitude —
+    so ``sqrt(err_sq) / (sqrt(out_sq) + 1e-12) < rtol`` is bit-identical
+    to calling accept_test on the full latent.
+    """
+    out = fused_step_rectify_ref(x, f, x_up, f_up, x_snap, f_snap,
+                                 dt, dsnap, fire)
+    err_sq = jnp.sum((out - prev) ** 2, axis=1)
+    out_sq = jnp.sum(out * out, axis=1)
+    return out, err_sq, out_sq

@@ -16,6 +16,12 @@ host loop to the async double-buffered runtime (speculative scheduling
 against cost-model completion predictions, one readback per completion
 event, bitwise-identical results — see serve/README.md "Async runtime").
 
+``--use-kernels`` lights up the Pallas kernel library end to end: the
+drift's backbone routes rmsnorm/attention/ssd through ``repro.kernels``
+(``cfg.use_kernels``) and the serve round becomes the fused
+step+rectify+accept kernel (``use_kernel=True`` on the engine) — bitwise
+identical on CPU where every kernel dispatches to its jnp oracle.
+
 ``--min-slots/--max-slots`` enable demand-paged capacity: S moves along
 power-of-two buckets, growing immediately on queued demand and shrinking
 after ``--resize-hysteresis`` rounds of sustained low occupancy (policies
@@ -79,9 +85,19 @@ def main():
                          "cost-model-predicted completion rounds only "
                          "(bitwise-identical results; mispredictions are "
                          "rolled back, bounded and counted)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route the Pallas kernel library through the "
+                         "whole hot path: the backbone's rmsnorm / "
+                         "attention / ssd-scan (via the model config) and "
+                         "the fused step+rectify+accept round (via the "
+                         "engine). Bitwise-identical outputs on CPU — "
+                         "kernels dispatch to their jnp oracles there; the "
+                         "real Pallas lowerings engage on TPU targets")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.use_kernels:
+        cfg = cfg.replace(use_kernels=True)
     params = init_wrapper(cfg, args.latent_dim, jax.random.PRNGKey(0))
     drift = make_drift(params, cfg)
     tgrid = uniform_tgrid(args.steps)
@@ -92,7 +108,8 @@ def main():
         engine = ChordsEngine(
             drift_builder=drift, latent_shape=(args.seq, args.latent_dim),
             n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
-            max_batch=args.slots, rtol=args.rtol)
+            max_batch=args.slots, rtol=args.rtol,
+            use_kernel=args.use_kernels or None)
         for i in range(args.requests):
             engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i)))
         done = []
@@ -112,7 +129,8 @@ def main():
         n_steps=args.steps, num_cores=args.cores, tgrid=tgrid,
         num_slots=args.slots, rtol=args.rtol, policy=args.policy,
         min_slots=args.min_slots, max_slots=args.max_slots,
-        resize_hysteresis=args.resize_hysteresis, overlap=args.overlap)
+        resize_hysteresis=args.resize_hysteresis, overlap=args.overlap,
+        use_kernel=args.use_kernels or None)
     for i in range(args.requests):
         engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i),
                               deadline_rounds=args.deadline_rounds))
@@ -123,6 +141,7 @@ def main():
               f"{out.rounds_used}/{args.steps} rounds ({out.speedup:.2f}x, "
               f"latency {out.latency_rounds} rounds)")
     st = engine.stats()
+    print(f"[serve] kernel path: {st['kernel_path']}")
     print(f"[serve] served {st['served']} requests in {st['rounds_total']} "
           f"rounds; throughput {st['throughput_req_per_round']:.3f} req/round, "
           f"occupancy {st['occupancy']:.2f}, latency p50/p95 "

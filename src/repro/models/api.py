@@ -90,7 +90,9 @@ def forward_hidden(params, cfg: ModelConfig, embeds, **kw):
 
         h, _ = jax.lax.scan(body, embeds, params["dec"])
         from repro.models import layers as L
-        return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        return L.rmsnorm(h, params["final_norm"], cfg.norm_eps,
+                         use_kernel=cfg.use_kernels,
+                         interpret=cfg.kernel_interpret)
     if cfg.family in ("hybrid",):
         # zamba2 returns (hidden, aux); recurrent backbones are causal-only
         kw.pop("causal", None)

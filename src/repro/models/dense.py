@@ -37,8 +37,14 @@ def specs(cfg: ModelConfig) -> dict:
 
 def _block(cfg: ModelConfig, p, h, positions, causal, attn_impl, cache=None,
            cur_len=None):
-    """One transformer block. Returns (h, new_kv or None)."""
-    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    """One transformer block. Returns (h, new_kv or None).
+
+    ``cfg.use_kernels`` routes the norms and the (non-decode) attention
+    through the Pallas kernel library (``repro.kernels``); positions here
+    are 0-based aranges, which is the flash kernel's causal contract.
+    """
+    uk, ki = cfg.use_kernels, cfg.kernel_interpret
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps, use_kernel=uk, interpret=ki)
     q, k, v = L.qkv_proj(p["attn"], cfg, x, positions)
     new_kv = None
     if cache is not None and cur_len is not None:  # decode: append to cache
@@ -50,12 +56,13 @@ def _block(cfg: ModelConfig, p, h, positions, causal, attn_impl, cache=None,
         new_kv = (k_cache, v_cache)
     else:
         q_pos = positions[0] if cfg.mrope_sections else positions
-        attn = L.attend(q, k, v, q_pos, q_pos, causal, impl=attn_impl)
+        attn = L.attend(q, k, v, q_pos, q_pos, causal, impl=attn_impl,
+                        use_kernel=uk, interpret=ki)
         if cache == "collect":
             new_kv = (k, v)
     h = h + L.out_proj(p["attn"], attn)
     h = shard_act(h, ("batch", "seq", "embed_act"))
-    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps, use_kernel=uk, interpret=ki)
     h = h + L.mlp(p["mlp"], cfg, x)
     h = shard_act(h, ("batch", "seq", "embed_act"))
     return h, new_kv
@@ -83,7 +90,9 @@ def forward_hidden(params, cfg: ModelConfig, embeds, positions=None, causal=Fals
     if remat:
         body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
     h, _ = jax.lax.scan(body, embeds, params["blocks"])
-    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps,
+                     use_kernel=cfg.use_kernels,
+                     interpret=cfg.kernel_interpret)
 
 
 def forward_train(params, cfg: ModelConfig, tokens, positions=None, attn_impl="auto",

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard_act
+from repro.kernels import resolve_kernel_mode
 from repro.utils.pspec import spec
 
 NEG_INF = -1e30
@@ -33,7 +34,18 @@ def rmsnorm_spec(d):
     return spec((d,), (None,), init="ones")
 
 
-def rmsnorm(x, w, eps=1e-6):
+def rmsnorm(x, w, eps=1e-6, use_kernel=False, interpret=True):
+    """RMSNorm with optional Pallas dispatch (``repro.kernels.rmsnorm``).
+
+    ``use_kernel``/``interpret`` follow ``ModelConfig.use_kernels`` — the jnp
+    body below is op-for-op the kernel's oracle (``rmsnorm_ref``), so the
+    bitwise-neutral mode (use_kernel=True on an interpret host) simply runs
+    it.
+    """
+    mode = resolve_kernel_mode(use_kernel, interpret)
+    if mode is not None:
+        from repro.kernels.rmsnorm.kernel import rmsnorm as rmsnorm_kernel
+        return rmsnorm_kernel(x, w, eps=eps, interpret=mode)
     dt = x.dtype
     x = x.astype(jnp.float32)
     x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
@@ -247,8 +259,33 @@ def attend_decode(q, k_cache, v_cache, cur_len, scale: Optional[float] = None):
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
+def flash_kernel_compatible(q, k) -> bool:
+    """Whether the Pallas flash kernel's tiling accepts these shapes:
+    Sq/Sk must divide into their (<=128) tiles. The kernel additionally
+    assumes positions are 0-based aranges (it derives the causal mask from
+    tile indices) — true for every backbone path that enables kernels."""
+    sq, sk = q.shape[1], k.shape[1]
+    return sq % min(128, sq) == 0 and sk % min(128, sk) == 0
+
+
 def attend(q, k, v, q_pos, k_pos, causal: bool, impl: str = "auto",
-           chunk: int = 1024, scale: Optional[float] = None):
+           chunk: int = 1024, scale: Optional[float] = None,
+           use_kernel=False, interpret=True):
+    """GQA attention with optional Pallas flash-kernel dispatch.
+
+    ``use_kernel``/``interpret`` follow ``ModelConfig.use_kernels``. The
+    kernel path requires 0-based arange positions (what ``forward_hidden``
+    passes) and tile-divisible sequence lengths; incompatible shapes fall
+    back to the jnp paths. Kernel-vs-jnp parity is tolerance-level, not
+    bitwise: ``attend_full`` scales logits after the QK matmul while the
+    flash kernel (like ``attention_ref``) scales q first, and the online
+    softmax reassociates the reduction (see kernels/README.md).
+    """
+    mode = resolve_kernel_mode(use_kernel, interpret)
+    if mode is not None and flash_kernel_compatible(q, k):
+        from repro.kernels.flash_attention.kernel import flash_attention
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               interpret=mode)
     if impl == "auto":
         impl = "chunked" if k.shape[1] > 2048 else "full"
     if impl == "full":

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard_act
+from repro.kernels import resolve_kernel_mode
 from repro.utils.pspec import spec
 
 
@@ -112,27 +113,59 @@ def ssd_forward(p, cfg: ModelConfig, x, conv_state=None, ssm_state=None):
     init = (jnp.zeros((bsz, h, hd, n), jnp.float32) if ssm_state is None
             else ssm_state.astype(jnp.float32))
 
-    def body(carry, inp):
-        # carry: inter-chunk state [B,H,hd,N]; one chunk's tensors:
-        xh_c, bh_c, ch_c, dth_c, logc_c = inp
-        cum = jnp.cumsum(logc_c, axis=1)  # [B,Lc,H]
-        total = cum[:, -1, :]  # [B,H]
-        xdt = xh_c.astype(jnp.float32) * dth_c[..., None]  # [B,Lc,H,hd]
-        # intra-chunk: G[l,m] = C_l . B_m ; M[h,l,m] = exp(cum_l - cum_m), m<=l
-        g = jnp.einsum("bln,bmn->blm", ch_c, bh_c)
-        dlog = cum[:, :, None, :] - cum[:, None, :, :]  # [B,Lc(l),Lc(m),H]
-        mexp = jnp.where(mask[None, :, :, None], jnp.exp(dlog), 0.0)
-        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", g, mexp, xdt)
-        # inter-chunk contribution from the carried state
-        y_inter = jnp.einsum("blh,bln,bhpn->blhp", jnp.exp(cum), ch_c, carry)
-        # chunk-local state + recurrence
-        w_local = jnp.exp(total[:, None, :] - cum)  # [B,Lc,H]
-        s_local = jnp.einsum("bmh,bmhp,bmn->bhpn", w_local, xdt, bh_c)
-        new = jnp.exp(total)[:, :, None, None] * carry + s_local
-        return new, (y_intra + y_inter).astype(x.dtype)
+    mode = resolve_kernel_mode(cfg.use_kernels, cfg.kernel_interpret)
+    if mode is not None:
+        # Pallas intra-chunk path (repro.kernels.ssd_scan): every chunk's
+        # masked decay-attention block and chunk-local state run in one
+        # kernel launch over a (batch*chunks, heads) grid; only the tiny
+        # [B, H, hd, N] inter-chunk recurrence stays in the scan below.
+        from repro.kernels.ssd_scan.kernel import ssd_chunk
+        cum = jnp.cumsum(logc, axis=2)                  # [B,nc,Lc,H]
+        total = cum[:, :, -1, :]                        # [B,nc,H]
+        xdt = xh.astype(jnp.float32) * dth[..., None]   # [B,nc,Lc,H,hd]
+        gdim = bsz * nc
+        y_k, s_k = ssd_chunk(
+            ch.reshape(gdim, lc, n), bh.reshape(gdim, lc, n),
+            xdt.transpose(0, 1, 3, 2, 4).reshape(gdim, h, lc, hd),
+            cum.transpose(0, 1, 3, 2).reshape(gdim, h, lc),
+            interpret=mode)
+        y_intra = y_k.reshape(bsz, nc, h, lc, hd).transpose(0, 1, 3, 2, 4)
+        s_local = s_k.reshape(bsz, nc, h, hd, n)
 
-    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, bh, ch, dth, logc))
-    final_state, y = jax.lax.scan(body, init, xs)
+        def body(carry, inp):
+            y_i, s_l, cum_c, ch_c, total_c = inp
+            y_inter = jnp.einsum("blh,bln,bhpn->blhp", jnp.exp(cum_c),
+                                 ch_c, carry)
+            new = jnp.exp(total_c)[:, :, None, None] * carry + s_l
+            return new, (y_i + y_inter).astype(x.dtype)
+
+        xs = tuple(jnp.moveaxis(t, 1, 0)
+                   for t in (y_intra, s_local, cum, ch, total))
+        final_state, y = jax.lax.scan(body, init, xs)
+    else:
+        def body(carry, inp):
+            # carry: inter-chunk state [B,H,hd,N]; one chunk's tensors:
+            xh_c, bh_c, ch_c, dth_c, logc_c = inp
+            cum = jnp.cumsum(logc_c, axis=1)  # [B,Lc,H]
+            total = cum[:, -1, :]  # [B,H]
+            xdt = xh_c.astype(jnp.float32) * dth_c[..., None]  # [B,Lc,H,hd]
+            # intra-chunk: G[l,m] = C_l . B_m ; M[h,l,m] = exp(cum_l - cum_m),
+            # m<=l
+            g = jnp.einsum("bln,bmn->blm", ch_c, bh_c)
+            dlog = cum[:, :, None, :] - cum[:, None, :, :]  # [B,Lc(l),Lc(m),H]
+            mexp = jnp.where(mask[None, :, :, None], jnp.exp(dlog), 0.0)
+            y_intra = jnp.einsum("blm,blmh,bmhp->blhp", g, mexp, xdt)
+            # inter-chunk contribution from the carried state
+            y_inter = jnp.einsum("blh,bln,bhpn->blhp", jnp.exp(cum), ch_c,
+                                 carry)
+            # chunk-local state + recurrence
+            w_local = jnp.exp(total[:, None, :] - cum)  # [B,Lc,H]
+            s_local = jnp.einsum("bmh,bmhp,bmn->bhpn", w_local, xdt, bh_c)
+            new = jnp.exp(total)[:, :, None, None] * carry + s_local
+            return new, (y_intra + y_inter).astype(x.dtype)
+
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, bh, ch, dth, logc))
+        final_state, y = jax.lax.scan(body, init, xs)
     y = jnp.moveaxis(y, 0, 1).reshape(bsz, s, h, hd).astype(jnp.float32)
     y = y + xh.reshape(bsz, s, h, hd).astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
     y = y.reshape(bsz, s, din).astype(x.dtype)

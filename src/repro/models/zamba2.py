@@ -51,10 +51,11 @@ def _reshape_groups(tree, g, per):
 
 
 def _shared_block(cfg, sp, h, h0, positions, attn_impl, kv_cache=None, cur_len=None):
+    uk, ki = cfg.use_kernels, cfg.kernel_interpret
     x = jnp.concatenate([h, h0], axis=-1)
-    x = L.rmsnorm(x, sp["ln_in"], cfg.norm_eps)
+    x = L.rmsnorm(x, sp["ln_in"], cfg.norm_eps, use_kernel=uk, interpret=ki)
     x = jnp.einsum("bse,ed->bsd", x, sp["w_in"].astype(h.dtype))
-    a_in = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+    a_in = L.rmsnorm(x, sp["ln1"], cfg.norm_eps, use_kernel=uk, interpret=ki)
     q, k, v = L.qkv_proj(sp["attn"], cfg, a_in, positions)
     new_kv = None
     if kv_cache is not None and cur_len is not None:
@@ -65,11 +66,14 @@ def _shared_block(cfg, sp, h, h0, positions, attn_impl, kv_cache=None, cur_len=N
         attn = L.attend_decode(q, kc, vc, cur_len + 1)
         new_kv = (kc, vc)
     else:
-        attn = L.attend(q, k, v, positions, positions, True, impl=attn_impl)
+        attn = L.attend(q, k, v, positions, positions, True, impl=attn_impl,
+                        use_kernel=uk, interpret=ki)
         if kv_cache == "collect":
             new_kv = (k, v)
     x = x + L.out_proj(sp["attn"], attn)
-    x = x + L.mlp(sp["mlp"], cfg, L.rmsnorm(x, sp["ln2"], cfg.norm_eps))
+    x = x + L.mlp(sp["mlp"], cfg,
+                  L.rmsnorm(x, sp["ln2"], cfg.norm_eps, use_kernel=uk,
+                            interpret=ki))
     out = jnp.einsum("bsd,de->bse", x, sp["w_out"].astype(h.dtype))
     return h + out, new_kv
 
@@ -85,7 +89,8 @@ def forward_hidden(params, cfg: ModelConfig, embeds, positions=None, causal=True
     mamba = _reshape_groups(params["mamba"], g, per)
 
     def inner(h, p, conv_st, ssm_st):
-        x = L.rmsnorm(h, p["ln"], cfg.norm_eps)
+        x = L.rmsnorm(h, p["ln"], cfg.norm_eps, use_kernel=cfg.use_kernels,
+                      interpret=cfg.kernel_interpret)
         y, (new_conv, new_ssm) = M.ssd_forward(p["ssd"], cfg, x, conv_st, ssm_st)
         return h + y, new_conv, new_ssm
 
@@ -102,7 +107,8 @@ def forward_hidden(params, cfg: ModelConfig, embeds, positions=None, causal=True
     if remat:
         outer = jax.checkpoint(outer, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
     h, (convs, ssms, kvs) = jax.lax.scan(outer, embeds, mamba)
-    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps,
+                  use_kernel=cfg.use_kernels, interpret=cfg.kernel_interpret)
 
     aux = None
     if collect_kv:

@@ -1043,6 +1043,9 @@ class ContinuousEngine:
             "buckets_visited": sorted(self._buckets_visited),
             "retraces": self.executor.retraces,
             "migration_traces": self.executor.migration_traces,
+            # which solver-step implementation served this engine's rounds
+            # (fused-accept-pallas | fused-accept-oracle | jnp-unfused)
+            "kernel_path": self.executor.kernel_path,
             # observed accept rounds (EMA per (i_seq, rtol) — feeds the cost
             # model's calibrated predictions; see sched/README.md)
             "accept_rounds_observed": self.cost.accept_table_json(),

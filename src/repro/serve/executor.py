@@ -21,11 +21,15 @@ programs were compiled in three private places (``StreamingSampler._run``,
   :class:`SlotState` — that moves live lanes between grids of different S
   during an elastic resize, copying every migrated lane's carry bit-exactly.
 
-``use_kernel=True`` builds every round body on the fused Pallas
-solver-step + rectification kernel (``repro.kernels.rectify``) instead of
-composed jnp ops; outputs are bitwise identical either way (parity test in
+``use_kernel=True`` builds every slot-round body on the fused Pallas
+solver-step + rectification + accept-reduction kernel
+(``repro.kernels.rectify``) instead of composed jnp ops: the rtol accept
+sums are reduced inside the kernel pass (no full-latent error array in the
+round jaxpr) and ``accept_from_sums`` finishes the decision on [S, K]
+scalars. Outputs are bitwise identical either way (parity test in
 ``tests/test_executor.py``) — the kernel is a memory-traffic optimization,
-never a semantics change.
+never a semantics change. ``kernel_path`` in ``stats()`` names which
+implementation served.
 """
 from __future__ import annotations
 
@@ -37,8 +41,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scheduler
-from repro.core.chords import (ChordsCarry, accept_test, bmask,
-                               chords_init_carry, gather_slots,
+from repro.core.chords import (ChordsCarry, accept_from_sums, accept_test,
+                               bmask, chords_init_carry, gather_slots,
                                make_round_body, make_slot_round_body,
                                reset_slots, slot_init_carry)
 
@@ -182,9 +186,17 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
     """
     s, k = spec.num_slots, spec.num_cores
     dtype = jnp.dtype(spec.dtype)
+    # use_kernel engages the FUSED round: solver step + rectification +
+    # accept reduction in one kernel pass (err/out sums leave the kernel as
+    # [S, K] scalars — accept_from_sums finishes on those, so the jaxpr has
+    # no full-latent error array between the step and the accept decision).
+    # use_kernel=False keeps the composed-jnp round with accept_test on the
+    # materialized output; both paths are bitwise identical on CPU.
+    fuse_accept = bool(use_kernel)
     slot_round = make_slot_round_body(drift, tgrid, n, k,
                                       use_kernel=use_kernel,
-                                      kernel_interpret=kernel_interpret)
+                                      kernel_interpret=kernel_interpret,
+                                      fuse_accept=fuse_accept)
 
     def round_fn(st: SlotState) -> SlotState:
         """One lockstep round for every live slot + per-slot accept test."""
@@ -193,14 +205,26 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
         # cores that wrote t=1 this round; recomputing it from the
         # scheduler table here left the returned mask dead in the jaxpr
         # (caught by repro.analysis jaxpr:dead-code)
-        carry, hit = slot_round(st.carry, st.i_arr, st.rounds, active)
+        if fuse_accept:
+            carry, hit, err_sq, out_sq = slot_round(
+                st.carry, st.i_arr, st.rounds, active, st.last_out)
+        else:
+            carry, hit = slot_round(st.carry, st.i_arr, st.rounds, active)
         emit = scheduler.emit_rounds_jnp(st.i_arr, n)  # [S, K]
         r = st.rounds
         any_emit = jnp.any(hit, axis=1)
         ek = jnp.argmax(hit, axis=1).astype(jnp.int32)  # slowest emitter wins
         out = carry.x[jnp.arange(s), ek]  # [S, ...]
 
-        ok = any_emit & st.has_last & accept_test(out, st.last_out, st.rtol, 1)
+        if fuse_accept:
+            # the emitting core's carry.x row IS x_new (alive & live there),
+            # so its in-kernel sums are the accept_test sums of `out` —
+            # dead-lane garbage in err_sq/out_sq is gated off by the masks
+            sek = (jnp.arange(s), ek)
+            agree = accept_from_sums(err_sq[sek], out_sq[sek], st.rtol)
+        else:
+            agree = accept_test(out, st.last_out, st.rtol, 1)
+        ok = any_emit & st.has_last & agree
         # core 0's emission is the exact sequential solve: force-accept it so
         # no request outlives its own N rounds
         final = any_emit & (r >= emit[:, 0])
@@ -555,6 +579,24 @@ class RoundExecutor:
         probe = getattr(self._migrate, "_cache_size", None)
         return int(probe()) if callable(probe) else 0
 
+    @property
+    def kernel_path(self) -> str:
+        """Which solver-step implementation serves this executor's rounds:
+
+        * ``"fused-accept-pallas"`` — the real Pallas lowering of the fused
+          step+rectify+accept kernel (``use_kernel=True``,
+          ``kernel_interpret=False``; TPU targets);
+        * ``"fused-accept-oracle"`` — the fused round structure with the
+          kernel executing as its bitwise-neutral jnp oracle
+          (``use_kernel=True`` on CPU, the interpret default);
+        * ``"jnp-unfused"`` — composed jnp ops, accept on the materialized
+          output (``use_kernel=False``).
+        """
+        if not self.use_kernel:
+            return "jnp-unfused"
+        return ("fused-accept-oracle" if self.kernel_interpret
+                else "fused-accept-pallas")
+
     def stats(self) -> dict:
         return {
             "retraces": self.retraces,
@@ -562,4 +604,5 @@ class RoundExecutor:
             "migration_traces": self.migration_traces,
             "cached_grids": len(self._grids),
             "cached_streams": len(self._streams),
+            "kernel_path": self.kernel_path,
         }

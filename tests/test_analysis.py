@@ -128,6 +128,29 @@ def test_race_detection_is_grid_order_invariant(seed, grid):
         pallas_check.find_races(out, points)
 
 
+# --- seeded mutants over the REAL kernel launches ----------------------------
+
+@pytest.mark.parametrize("name", ["flash_attention", "rmsnorm", "ssd_scan",
+                                  "rectify", "rectify_accept"])
+def test_mutant_pinned_kernel_output_block_is_a_race(name):
+    """Clone each real kernel's first output BlockMeta with its index_map
+    pinned to block (0, ..) — every grid program then writes the same
+    region, the tiling race pallas_check exists to catch. Proves the
+    checker guards each launch in the library, not just synthetic metas."""
+    from repro.analysis.surface import kernel_cases
+
+    case = {c.name: c for c in kernel_cases()}[name]
+    out = case.launch.outputs[0]
+    rank = len(out.block_shape)
+    pinned = out._replace(index_map=lambda *idx: (0,) * rank)
+    mutant = case.launch._replace(
+        outputs=(pinned,) + tuple(case.launch.outputs[1:]))
+    found = pallas_check.check_launch(mutant)
+    assert ("pallas", "ww-race") in _codes(found), (name, found)
+    # the race is the mutant's alone — the shipped launch is clean
+    assert pallas_check.check_launch(case.launch) == [], name
+
+
 # --- clean tree: the real kernels and a real grid lint clean -----------------
 
 def test_real_kernel_launches_are_clean():
