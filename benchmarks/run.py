@@ -25,7 +25,12 @@ identical to the fixed-S run — plus the async-overlap contract: zero
 speculation rollbacks on the deterministic rtol=0 trace, host syncs
 strictly below the synchronous elastic run, a busy-grid round gap of ~0,
 and bitwise-identical samples. Stats land in results/serve_burst.json
-(CI artifact).
+(CI artifact). A fifth traced run (overlap=True, rtol=1e-5, elastic
+2..4 slots) deliberately exercises the speculation-rollback and resize
+paths and writes the Chrome trace artifact results/serve_trace.json plus
+a bare metrics snapshot results/serve_metrics.json; the run asserts
+``python -m repro.obs check`` passes on it in-process (CI re-runs the CLI
+on the artifact).
 
 ``--kernels`` runs the Pallas kernel-library roofline report
 (``benchmarks.kernels``): per kernel, launch_meta-derived bytes/FLOPs
@@ -51,6 +56,7 @@ def serve_smoke() -> dict:
 
     from benchmarks.common import RESULTS_DIR
     from repro.core import uniform_tgrid
+    from repro.obs import Tracer
     from repro.serve import ChordsEngine, ContinuousEngine, Request
     from repro.serve.sched.workload import (drive, sla_demo_trace,
                                             sla_engine_kwargs)
@@ -64,7 +70,8 @@ def serve_smoke() -> dict:
 
     t0 = time.perf_counter()
     cont = ContinuousEngine(drift, latent_shape=(4,), n_steps=n, num_cores=k,
-                            tgrid=tg, num_slots=slots, rtol=0.3)
+                            tgrid=tg, num_slots=slots, rtol=0.3,
+                            tracer=Tracer())
     for i in range(n_req):
         cont.submit(Request(rid=i, key=jax.random.PRNGKey(i)))
     served = cont.run_until_drained()
@@ -72,6 +79,11 @@ def serve_smoke() -> dict:
     st = cont.stats()
     assert len(served) == n_req, (len(served), n_req)
     assert all(np.isfinite(np.asarray(o.sample)).all() for _, o in served)
+
+    doc = cont.write_trace(os.path.join(RESULTS_DIR, "serve_smoke_trace.json"),
+                           meta={"benchmark": "serve_smoke"})
+    assert {"request/compute", "request/queued"} <= {
+        e["name"] for e in doc["traceEvents"]}, "lifecycle spans missing"
 
     static = ChordsEngine(drift, latent_shape=(4,), n_steps=n, num_cores=k,
                           tgrid=tg, max_batch=slots, rtol=0.3)
@@ -136,6 +148,8 @@ def serve_burst() -> dict:
 
     from benchmarks.common import RESULTS_DIR
     from repro.core import uniform_tgrid
+    from repro.obs import Tracer
+    from repro.obs.check import check as obs_check
     from repro.serve import ContinuousEngine
     from repro.serve.sched.workload import bursty_trace, drive
 
@@ -204,9 +218,50 @@ def serve_burst() -> dict:
           f"gap_mean_ms={1e3 * a_st['round_gap_mean_s']:.3f},"
           f"gap_p95_ms={1e3 * a_st['round_gap_p95_s']:.3f}")
 
+    # -- observability acceptance (ISSUE 9): a traced overlap run that
+    # actually exercises the rollback and resize paths. rtol=1e-5 routes
+    # predictions through the calibratable path, so the cost model's
+    # cold-start heuristic predicts accepts at the second emission — rounds
+    # before this stiff drift actually converges — and every predicted-done
+    # event under burst queue pressure becomes a speculative admission the
+    # verify readback rolls back. The burst over min_slots=2 forces a grow,
+    # giving the trace its resize event. (The rtol=0 async contract above is
+    # the opposite regime — zero rollbacks — and stays untouched.)
+    tracer = Tracer()
+    t0 = time.perf_counter()
+    spec_eng = ContinuousEngine(drift, latent_shape=(4,), n_steps=n,
+                                num_cores=k, tgrid=tg, rtol=1e-5,
+                                min_slots=2, max_slots=4,
+                                resize_hysteresis=8, overlap=True,
+                                tracer=tracer)
+    s_reqs, s_arrivals = bursty_trace(n, rtol=1e-5)
+    s_out = drive(spec_eng, s_reqs, s_arrivals)
+    s_st = spec_eng.stats()
+    s_st["wall_s"] = time.perf_counter() - t0
+    assert sorted(s_out) == sorted(e_out), "rollback run dropped requests"
+    assert s_st["speculation_rollbacks"] >= 1, s_st["speculation_rollbacks"]
+    assert s_st["grows"] >= 1, s_st["grows"]
+    trace_path = os.path.join(RESULTS_DIR, "serve_trace.json")
+    doc = spec_eng.write_trace(trace_path, meta={"benchmark": "serve_burst",
+                                                 "run": "elastic-async-spec"})
+    spec_eng.metrics.write_snapshot(
+        os.path.join(RESULTS_DIR, "serve_metrics.json"))
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"request/queued", "request/compute", "spec/rollback"} <= names \
+        and names & {"resize/grow", "resize/shrink"}, sorted(names)
+    ok, report = obs_check(doc)
+    for line in report:
+        print(f"serve_burst[obs]{line}")
+    assert ok, "python -m repro.obs check would fail on serve_trace.json"
+    print(f"serve_burst[spec],rollbacks={s_st['speculation_rollbacks']},"
+          f"confirms={s_st['speculation_confirms']},"
+          f"grows={s_st['grows']},trace_events={len(doc['traceEvents'])},"
+          f"trace={trace_path}")
+
     out = {"min_slots": min_s, "max_slots": max_s,
            "elastic": e_st, "elastic_async": a_st,
            "fixed_max": fmax_st, "fixed_min": fmin_st,
+           "spec": s_st,
            "migrated_rids": sorted(elastic.migrated_rids),
            "async_migrated_rids": sorted(easync.migrated_rids)}
     with open(os.path.join(RESULTS_DIR, "serve_burst.json"), "w") as f:

@@ -41,6 +41,7 @@ import jax
 import numpy as np
 
 from repro.core import GaussianMixture, uniform_tgrid
+from repro.obs import Tracer
 from repro.serve import ChordsEngine, ContinuousEngine, Request
 from repro.serve.sched.workload import (drive, sla_demo_trace,
                                         sla_engine_kwargs)
@@ -158,6 +159,10 @@ def main():
                     help="serve rounds through the fused Pallas "
                          "step+rectify+accept kernel (bitwise-identical "
                          "on CPU, where it dispatches to its jnp oracle)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the continuous engine's Chrome trace-event "
+                         "JSON (lifecycle spans + metrics snapshot; open in "
+                         "ui.perfetto.dev, check with `python -m repro.obs`)")
     args = ap.parse_args()
 
     gm = GaussianMixture.random(jax.random.PRNGKey(0), num_modes=6,
@@ -182,8 +187,14 @@ def main():
                             min_slots=args.min_slots,
                             max_slots=args.max_slots,
                             resize_hysteresis=args.resize_hysteresis,
-                            use_kernel=args.use_kernels or None)
+                            use_kernel=args.use_kernels or None,
+                            tracer=Tracer() if args.trace_out else None)
     cont_out, cont_rounds = serve_continuous(cont, reqs, arrivals)
+    if args.trace_out:
+        doc = cont.write_trace(args.trace_out,
+                               meta={"launcher": "serve_diffusion"})
+        print(f"[serve] trace: {args.trace_out} "
+              f"({doc['otherData']['events']} events)")
 
     for rid, out in sorted(cont_out.items()):
         print(f"[serve] request {rid:>3}: core {out.accepted_core} after "

@@ -6,7 +6,13 @@ build (round / admit / multi / stream / migrate — see
 into sub-jaxprs (``while``/``scan``/``cond``/``pjit``), and flags:
 
 * ``host-sync``    — callback primitives that force a device→host round
-                     trip inside a compiled program (error).
+                     trip inside a compiled program (error). Callbacks the
+                     observability substrate planted itself (tagged via
+                     ``repro.obs.mark_instrumentation``) are reported as
+                     informational ``host-sync-obs`` instead: the tracer's
+                     opt-in device hooks are the instrument, not the
+                     disease, and enabling tracing must never trip the
+                     static-analysis gate.
 * ``const-capture``— closure-captured device/numpy arrays above a size
                      threshold: each call re-uploads them (info).
 * ``dtype-64``     — any 64-bit-wide intermediate in a program whose
@@ -29,6 +35,7 @@ from typing import Iterable, List
 import numpy as np
 
 from repro.analysis.report import Finding
+from repro.obs import is_instrumentation
 
 PASS = "jaxpr"
 
@@ -138,12 +145,18 @@ def lint_jaxpr(name: str, closed_jaxpr) -> List[Finding]:
 
     # --- per-equation sweeps (recursive) ------------------------------
     sync_locs: dict = {}
+    obs_locs: dict = {}
     wide_locs: dict = {}
     weak_locs: dict = {}
     for eqn in _walk_eqns(jaxpr):
         prim = eqn.primitive.name
         if prim in HOST_SYNC_PRIMITIVES:
-            sync_locs[prim] = sync_locs.get(prim, 0) + 1
+            # a callback the tracer planted (mark_instrumentation) is
+            # deliberate, baselined observability — downgrade to info
+            if any(is_instrumentation(v) for v in eqn.params.values()):
+                obs_locs[prim] = obs_locs.get(prim, 0) + 1
+            else:
+                sync_locs[prim] = sync_locs.get(prim, 0) + 1
         if not inputs_wide:
             for v in eqn.outvars:
                 aval = _aval_of(v)
@@ -165,6 +178,12 @@ def lint_jaxpr(name: str, closed_jaxpr) -> List[Finding]:
             PASS, "host-sync", "error", f"{name}:{prim}",
             f"{name}: {n}x {prim} — host round-trip inside a compiled "
             f"program stalls the device every call"))
+    for prim, n in sorted(obs_locs.items()):
+        findings.append(Finding(
+            PASS, "host-sync-obs", "info", f"{name}:{prim}",
+            f"{name}: {n}x {prim} planted by repro.obs instrumentation — "
+            f"an opt-in tracer hook, still a host round-trip per call; "
+            f"disable tracing to remove it"))
     for (prim, dt), n in sorted(wide_locs.items()):
         findings.append(Finding(
             PASS, "dtype-64", "error", f"{name}:{prim}:{dt}",

@@ -41,6 +41,7 @@ import jax
 from repro.configs import get_config
 from repro.core.ode import uniform_tgrid
 from repro.diffusion import init_wrapper, make_drift
+from repro.obs import Tracer, format_stats
 from repro.serve import ChordsEngine, ContinuousEngine, Request
 
 
@@ -93,6 +94,11 @@ def main():
                          "engine). Bitwise-identical outputs on CPU — "
                          "kernels dispatch to their jnp oracles there; the "
                          "real Pallas lowerings engage on TPU targets")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON artifact (request "
+                         "lifecycle + dispatch spans + metrics snapshot) — "
+                         "open in ui.perfetto.dev, verify with `python -m "
+                         "repro.obs check PATH` (continuous engine only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -130,7 +136,8 @@ def main():
         num_slots=args.slots, rtol=args.rtol, policy=args.policy,
         min_slots=args.min_slots, max_slots=args.max_slots,
         resize_hysteresis=args.resize_hysteresis, overlap=args.overlap,
-        use_kernel=args.use_kernels or None)
+        use_kernel=args.use_kernels or None,
+        tracer=Tracer() if args.trace_out else None)
     for i in range(args.requests):
         engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i),
                               deadline_rounds=args.deadline_rounds))
@@ -140,35 +147,17 @@ def main():
         print(f"[serve] request {rid:>3}: core {out.accepted_core} after "
               f"{out.rounds_used}/{args.steps} rounds ({out.speedup:.2f}x, "
               f"latency {out.latency_rounds} rounds)")
-    st = engine.stats()
-    print(f"[serve] kernel path: {st['kernel_path']}")
-    print(f"[serve] served {st['served']} requests in {st['rounds_total']} "
-          f"rounds; throughput {st['throughput_req_per_round']:.3f} req/round, "
-          f"occupancy {st['occupancy']:.2f}, latency p50/p95 "
-          f"{st['latency_rounds_p50']:.0f}/{st['latency_rounds_p95']:.0f}, "
-          f"mean speedup {st['mean_speedup']:.2f}x")
-    print(f"[serve] policy={st['policy']}: deadline misses "
-          f"{st['deadline_misses']}/{st['deadline_total']} "
-          f"(rate {st['deadline_miss_rate']:.2f}), "
-          f"{st['preemptions']} preemptions "
-          f"({st['preempted_rounds_wasted']} rounds wasted), "
-          f"{st['host_syncs']} host syncs for {st['rounds_total']} rounds")
-    if st["overlap"]:
-        print(f"[serve] async: {st['speculations']} speculations "
-              f"({st['speculation_confirms']} confirmed, "
-              f"{st['speculation_rollbacks']} rolled back, "
-              f"{st['speculated_rounds_wasted']} rounds wasted), round gap "
-              f"mean/p95 {1e3 * st['round_gap_mean_s']:.2f}/"
-              f"{1e3 * st['round_gap_p95_s']:.2f} ms over "
-              f"{st['round_gap_count']} gaps")
-    if st["min_slots"] != st["max_slots"]:
-        print(f"[serve] elastic: S in {st['min_slots']}..{st['max_slots']} "
-              f"(now {st['num_slots']}), {st['grows']} grows / "
-              f"{st['shrinks']} shrinks ({st['resize_vetoes']} vetoed), "
-              f"{st['migrations']} lane migrations, "
-              f"{st['wasted_slot_rounds']} wasted slot-rounds, "
-              f"{st['retraces']} retraces for buckets "
-              f"{st['buckets_visited']}")
+    # registry-driven rendering: every stats() key prints exactly once, new
+    # metrics show up with zero launcher changes, renamed ones can't leave a
+    # stale hand-formatted line behind (see repro.obs.render)
+    for line in format_stats(engine.stats()):
+        print(line)
+    if args.trace_out:
+        doc = engine.write_trace(args.trace_out, meta={"launcher": "serve"})
+        print(f"[serve] trace: {args.trace_out} "
+              f"({doc['otherData']['events']} events, "
+              f"{doc['otherData']['dropped']} dropped) — open in "
+              f"ui.perfetto.dev or `python -m repro.obs summarize`")
 
 
 if __name__ == "__main__":

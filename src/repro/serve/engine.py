@@ -48,7 +48,6 @@ serve/README.md.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import math
 import time
@@ -59,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.init_sequence import make_sequence
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.serve.executor import (GridSpec, RoundExecutor, SlotState,
                                   StreamSpec, ambient_sharding_tag)
 from repro.serve.sched.cost import CostModel
@@ -78,17 +78,20 @@ class SampleOut:
 
 
 def _resolve_executor(drift, tgrid, n_steps, executor,
-                      use_kernel) -> RoundExecutor:
+                      use_kernel, tracer=None, metrics=None) -> RoundExecutor:
     """Engine-side executor setup: build one, or adopt the provided one.
 
     ``use_kernel=None`` (the engine default) inherits the executor's
     setting; an explicit bool that *contradicts* a provided executor raises
     instead of being silently ignored — the flag lives on the executor,
-    which owns compilation.
+    which owns compilation. A shared executor keeps its own tracer/metrics
+    (possibly the no-op defaults); only a freshly built one inherits the
+    engine's.
     """
     if executor is None:
         return RoundExecutor(drift, tgrid, n_steps,
-                             use_kernel=bool(use_kernel))
+                             use_kernel=bool(use_kernel),
+                             tracer=tracer, metrics=metrics)
     if use_kernel is not None and bool(use_kernel) != executor.use_kernel:
         raise ValueError(
             f"use_kernel={use_kernel} conflicts with the provided "
@@ -321,17 +324,26 @@ class ContinuousEngine:
                  resize_hysteresis: int = 8,
                  overlap: bool = False,
                  executor: Optional[RoundExecutor] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.latent_shape = tuple(latent_shape)
         self.n = n_steps
         self.k = num_cores
         self.rtol = rtol
         self.priority_speedup = priority_speedup
+        # observability: NULL_TRACER is a zero-allocation no-op, so the
+        # un-traced engine stays bitwise-identical to pre-obs behavior;
+        # the metrics registry is the single source of truth behind stats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.policy = get_policy(policy)
         self.cost = CostModel(num_cores, n_steps,
-                              priority_speedup=priority_speedup)
+                              priority_speedup=priority_speedup,
+                              metrics=self.metrics)
         self.executor = _resolve_executor(drift, tgrid, n_steps, executor,
-                                          use_kernel)
+                                          use_kernel, tracer=self.tracer,
+                                          metrics=self.metrics)
         if min_slots is None and max_slots is None:
             self.min_slots = self.max_slots = int(num_slots)
         else:
@@ -349,44 +361,53 @@ class ContinuousEngine:
         self._install_grid(self._ladder[0])  # demand-paged: start smallest
         self._buckets_visited = {self.s}
         self.queue = AdmissionQueue(aging_rounds=aging_rounds)
-        self.round_count = 0
-        self.host_syncs = 0  # done-flag readbacks (the per-round sync killed
-        # by the multi-round device loop)
+        self.round_count = 0  # plain attribute: benchmark drivers write it
         self.preempted_rids: set = set()
         self.migrated_rids: set = set()  # rids whose lane crossed a resize
-        self._preempt_count = 0
-        self._preempt_rounds_wasted = 0
-        self._deadline_total = 0
-        self._deadline_misses = 0
-        self._live_sum = 0   # occupancy numerator (live lane-rounds)
-        self._slot_rounds = 0   # capacity integral: sum of S over run rounds
-        self._wasted_sum = 0    # dead-lane rounds actually executed
         self._low_streak = 0    # consecutive rounds of shrinkable occupancy
-        self._resizes = 0
-        self._grow_count = 0
-        self._shrink_count = 0
-        self._resize_vetoes = 0
-        self._migrations = 0
-        self._latencies: List[int] = []
-        self._speedups: List[float] = []  # floats only — retaining served
-        # SampleOuts (full latents) would leak without bound in a
-        # long-lived serving process
         self.overlap = bool(overlap)
-        # speculation accounting (async mode)
-        self._spec_count = 0          # steps that enqueued a speculative admit
-        self._spec_confirms = 0
-        self._spec_rollbacks = 0
-        self._spec_rounds_wasted = 0  # dispatched rounds discarded by rollback
-        self._drain_lag_rounds = 0    # early accepts discovered >= 1 round late
+        # every scalar that used to live in an ad-hoc attribute is now a
+        # registry instrument under a stable dotted name (stats() renders
+        # the same legacy keys from these; obs check reads them from the
+        # trace's embedded snapshot)
+        m = self.metrics
+        self._c_host_syncs = m.counter("serve.host_syncs")
+        self._c_preempt = m.counter("serve.preempt.count")
+        self._c_preempt_wasted = m.counter("serve.preempt.rounds_wasted")
+        self._c_deadline_total = m.counter("serve.deadline.total")
+        self._c_deadline_misses = m.counter("serve.deadline.misses")
+        self._c_live = m.counter("serve.occupancy.live_rounds")
+        self._c_slot_rounds = m.counter("serve.occupancy.slot_rounds")
+        self._c_wasted = m.counter("serve.occupancy.wasted_rounds")
+        self._c_resizes = m.counter("serve.resize.count")
+        self._c_grows = m.counter("serve.resize.grows")
+        self._c_shrinks = m.counter("serve.resize.shrinks")
+        self._c_vetoes = m.counter("serve.resize.vetoes")
+        self._c_migrations = m.counter("serve.resize.migrations")
+        self._c_served = m.counter("serve.served")
+        self._c_spec = m.counter("serve.spec.count")
+        self._c_spec_confirms = m.counter("serve.spec.confirms")
+        self._c_spec_rollbacks = m.counter("serve.spec.rollbacks")
+        self._c_spec_wasted = m.counter("serve.spec.rounds_wasted")
+        self._c_drain_lag = m.counter("serve.drain_lag_rounds")
+        self._c_dispatches = m.counter("serve.dispatches")
+        # bounded reservoirs replace the previously unbounded _latencies /
+        # _speedups lists: count/sum/min/max stay exact forever, percentiles
+        # are exact up to the reservoir capacity and an unbiased uniform-
+        # sample estimate beyond (see obs/metrics.py docstring)
+        self._h_latency = m.histogram("serve.latency_rounds")
+        self._h_speedup = m.histogram("serve.speedup")
         # round-gap timer: host-side monotonic gap between consecutive device
         # dispatches while the grid stays busy — the device-starvation metric
         # the async loop exists to drive to ~0 (both modes measure it)
-        self._dispatches = 0
-        self._gap_count = 0
-        self._gap_sum = 0.0
-        self._gap_max = 0.0
-        self._gaps: "collections.deque" = collections.deque(maxlen=2048)
+        self._h_gap = m.histogram("serve.round_gap_s")
+        m.gauge("serve.overlap").set(float(self.overlap))
         self._last_dispatch_done: Optional[float] = None
+        self._disp_kind: str = "round"
+        self._disp_t0 = 0.0
+        self._disp_args: dict = {}
+        self._disp_ann = None
+        self._submit_wall: Dict[int, float] = {}  # rid -> queued-span start
 
     # -- grid management ------------------------------------------------------
 
@@ -414,6 +435,13 @@ class ContinuousEngine:
         # cost-model prediction of the absolute round each lane accepts —
         # the async engine's speculation horizon (None = slot free)
         self._pred_done: List[Optional[int]] = [None] * s
+        # wall clock of each lane's committed admission — the start of its
+        # request/compute span on the per-slot trace track
+        self._admit_wall: List[float] = [0.0] * s
+        self.metrics.gauge("serve.slots").set(float(s))
+        if self.tracer.enabled:
+            for i in range(s):
+                self.tracer.label_track(("slots", i), f"slot {i}")
 
     def _resize_to(self, new_s: int):
         """Move the grid to capacity ``new_s``, migrating live lanes.
@@ -426,9 +454,10 @@ class ContinuousEngine:
         occupied = [i for i, it in enumerate(self._slot_item)
                     if it is not None]
         assert len(occupied) <= new_s, (occupied, new_s)
-        old_spec, old_state = self.spec, self.state
+        old_s, old_spec, old_state = self.s, self.spec, self.state
         old = (self._slot_item, self._slot_iseq, self._slot_rtol,
-               self._admit_round, self._pred_done)
+               self._admit_round, self._pred_done, self._admit_wall)
+        t_mig = self.tracer.now()
         self._install_grid(new_s)
         if occupied:
             mask = np.zeros((new_s,), bool)
@@ -441,10 +470,27 @@ class ContinuousEngine:
                 self._admit_round[dst] = old[3][s_old]
                 self._pred_done[dst] = old[4][s_old]
                 self.migrated_rids.add(old[0][s_old].payload.rid)
-            self._migrations += len(occupied)
+                # a migration ends the lane's residency on the old slot
+                # track and opens a new one on the destination — per-slot
+                # compute spans stay nest-or-disjoint across renumbering
+                self.tracer.span("request/compute", old[5][s_old],
+                                 round_idx=self.round_count,
+                                 track=("slots", s_old), t1=t_mig,
+                                 rid=old[0][s_old].payload.rid,
+                                 migrated=True)
+                self._admit_wall[dst] = t_mig
+            self._c_migrations.inc(len(occupied))
+            t0 = self.tracer.now()
             self.state = self.executor.migrate(old_spec, self.spec)(
                 self.state, old_state, jnp.asarray(mask), jnp.asarray(src))
-        self._resizes += 1
+            self.tracer.span("dispatch/migrate", t0,
+                             round_idx=self.round_count, lanes=len(occupied))
+            self.tracer.instant("migrate/lanes", round_idx=self.round_count,
+                                lanes=len(occupied), src=old_s, dst=new_s)
+        self._c_resizes.inc()
+        self.tracer.instant("resize/grow" if new_s > old_s else
+                            "resize/shrink", round_idx=self.round_count,
+                            src=old_s, dst=new_s, live=len(occupied))
         self._buckets_visited.add(new_s)
 
     def _next_lower_bucket(self) -> Optional[int]:
@@ -465,7 +511,7 @@ class ContinuousEngine:
                     if b >= demand:
                         break
             self._resize_to(target)  # growth is never vetoed
-            self._grow_count += 1
+            self._c_grows.inc()
             self._low_streak = 0
             return
         lower = self._next_lower_bucket()
@@ -482,11 +528,14 @@ class ContinuousEngine:
                                       if it is None],
                           lanes=self._lane_views(), cost=self.cost)
         if self.policy.consider_resize(view, proposal) is None:
-            self._resize_vetoes += 1
+            self._c_vetoes.inc()
+            self.tracer.instant("resize/veto", round_idx=self.round_count,
+                                src=self.s, dst=lower, live=live_ct,
+                                queued=len(self.queue))
             self._low_streak = 0  # re-arm: ask again after a full window
             return
         self._resize_to(lower)
-        self._shrink_count += 1
+        self._c_shrinks.inc()
         self._low_streak = 0
 
     # -- host loop ------------------------------------------------------------
@@ -500,11 +549,22 @@ class ContinuousEngine:
         """Any slot occupied (queued requests not included)."""
         return any(it is not None for it in self._slot_item)
 
+    @property
+    def host_syncs(self) -> int:
+        """Done-flag readbacks (the per-round sync killed by the
+        multi-round device loop); a read view over ``serve.host_syncs``."""
+        return int(self._c_host_syncs.value)
+
     def submit(self, req: Request):
         self.queue.submit(req, priority=req.priority,
                           submit_round=self.round_count,
                           deadline_rounds=req.deadline_rounds,
                           rtol=self.rtol if req.rtol is None else req.rtol)
+        if self.tracer.enabled:
+            self._submit_wall[req.rid] = self.tracer.now()
+            self.tracer.instant("request/submit", round_idx=self.round_count,
+                                track=("requests", req.rid), rid=req.rid,
+                                priority=req.priority)
 
     def _lane_views(self) -> list[LaneView]:
         """Host-side in-flight snapshot — NO device sync: every live lane
@@ -551,18 +611,21 @@ class ContinuousEngine:
                 undo.prior[slot] = (
                     self._slot_item[slot], self._slot_iseq[slot],
                     float(self._slot_rtol[slot]), self._admit_round[slot],
-                    self._pred_done[slot])
+                    self._pred_done[slot], self._admit_wall[slot])
         for slot in dec.evictions:
             item = self._slot_item[slot]
             ran = now - self._admit_round[slot]
             item.rounds_credit += ran
             item.preemptions += 1
-            self._preempt_count += 1
-            self._preempt_rounds_wasted += ran
+            self._c_preempt.inc()
+            self._c_preempt_wasted.inc(ran)
             if record_undo:
                 undo.evictions.append((slot, item, ran))
                 if item.payload.rid not in self.preempted_rids:
                     undo.preempted_new.append(item.payload.rid)
+            else:
+                self._trace_evict(slot, item, ran, now,
+                                  self._admit_wall[slot])
             self.preempted_rids.add(item.payload.rid)
             self._slot_item[slot] = None
             self._pred_done[slot] = None
@@ -571,6 +634,7 @@ class ContinuousEngine:
             return undo
         mask = np.zeros(self.s, bool)
         i_arr = np.zeros((self.s, self.k), np.int32)
+        wall = self.tracer.now()
         for a in dec.admissions:
             mask[a.slot] = True
             i_arr[a.slot] = a.i_seq
@@ -578,18 +642,73 @@ class ContinuousEngine:
             self._slot_item[a.slot] = a.item
             self._slot_iseq[a.slot] = list(a.i_seq)
             self._admit_round[a.slot] = now
+            self._admit_wall[a.slot] = wall
             self._pred_done[a.slot] = self.cost.predict_done_round(
                 a.i_seq, a.item.rtol, now)
             if record_undo:
                 undo.admissions.append((a.slot, a.item))
+            else:
+                self._trace_admit(a.slot, a.item, now, wall)
         idx = np.asarray([a.slot for a in dec.admissions], np.int32)
         kstack = jnp.stack([jnp.asarray(a.item.payload.key)
                             for a in dec.admissions]).astype(jnp.uint32)
         keys = jnp.zeros((self.s, 2), jnp.uint32).at[idx].set(kstack)
+        t0 = self.tracer.now()
         self.state = self._prog.admit(self.state, jnp.asarray(mask), keys,
                                       jnp.asarray(i_arr),
                                       jnp.asarray(self._slot_rtol))
+        self.tracer.span("dispatch/admit", t0, round_idx=now,
+                         lanes=len(dec.admissions))
         return undo
+
+    # -- commit-point trace emission ------------------------------------------
+    # Speculatively applied decisions emit NOTHING (record_undo=True); their
+    # events are emitted at confirmation (:meth:`_trace_commit_undo`) or by
+    # the committed re-decide after a rollback — so a rolled-back admission
+    # can never leave phantom lifecycle events in the trace, and per-track
+    # spans stay well-nested by construction.
+
+    def _trace_admit(self, slot: int, item: QueueItem, now: int,
+                     wall: float) -> None:
+        """Close the request's queued span and (re)open its residency."""
+        self._admit_wall[slot] = wall
+        if not self.tracer.enabled:
+            return
+        rid = item.payload.rid
+        t_q = self._submit_wall.pop(rid, None)
+        if t_q is not None:
+            self.tracer.span("request/queued", t_q, round_idx=now,
+                             track=("requests", rid), t1=wall, rid=rid,
+                             slot=slot)
+
+    def _trace_evict(self, slot: int, item: QueueItem, ran: int, now: int,
+                     admit_wall: float) -> None:
+        """A committed eviction ends the residency span and re-opens the
+        request's queued span (evict-requeue)."""
+        if not self.tracer.enabled:
+            return
+        rid = item.payload.rid
+        wall = self.tracer.now()
+        self.tracer.span("request/compute", admit_wall, round_idx=now,
+                         track=("slots", slot), t1=wall, rid=rid,
+                         preempted=True, rounds_ran=ran)
+        self.tracer.instant("preempt", round_idx=now, rid=rid, slot=slot,
+                            rounds_ran=ran)
+        self._submit_wall[rid] = wall
+
+    def _trace_commit_undo(self, undo: Optional[_DecisionUndo],
+                           now: int) -> None:
+        """Emit the lifecycle events of a speculative decision the verify
+        readback just CONFIRMED. Called after the due drains so the evicted/
+        replaced residents' spans close before the new residents' open."""
+        if undo is None or not self.tracer.enabled:
+            return
+        for slot, item, ran in undo.evictions:
+            prior = undo.prior[slot]
+            self._trace_evict(slot, item, ran, now, prior[5])
+        wall = self.tracer.now()
+        for slot, item in undo.admissions:
+            self._trace_admit(slot, item, now, wall)
 
     def _undo_decision(self, undo: _DecisionUndo):
         """Reverse the host side of a speculatively applied decision (the
@@ -602,13 +721,14 @@ class ContinuousEngine:
             self.queue.remove(item)
             item.rounds_credit -= ran
             item.preemptions -= 1
-            self._preempt_count -= 1
-            self._preempt_rounds_wasted -= ran
+            self._c_preempt.inc(-1)  # negative inc: speculative-undo path
+            self._c_preempt_wasted.inc(-ran)
         for rid in undo.preempted_new:
             self.preempted_rids.discard(rid)
         for slot, prior in undo.prior.items():
             (self._slot_item[slot], self._slot_iseq[slot], rtol,
-             self._admit_round[slot], self._pred_done[slot]) = prior
+             self._admit_round[slot], self._pred_done[slot],
+             self._admit_wall[slot]) = prior
             self._slot_rtol[slot] = rtol
 
     def _amortizable(self) -> bool:
@@ -624,26 +744,49 @@ class ContinuousEngine:
 
     # -- round-gap timer ------------------------------------------------------
 
-    def _mark_dispatch(self):
+    def _mark_dispatch(self, kind: str = "round", rounds: int = 1,
+                       live: int = 0):
         """Called immediately BEFORE handing a round program to the device:
         records the host-side monotonic gap since the previous dispatch
         returned. On a busy grid this gap is exactly the time the device
         sat idle waiting for the host (decision + readback) — the async
-        loop exists to drive it to ~0 (asserted by --serve-burst)."""
+        loop exists to drive it to ~0 (asserted by --serve-burst and
+        machine-verified from the trace by ``repro.obs check``)."""
         t = time.monotonic()
+        g = None
         if self._last_dispatch_done is not None:
             g = max(0.0, t - self._last_dispatch_done)
-            self._gap_count += 1
-            self._gap_sum += g
-            self._gap_max = max(self._gap_max, g)
-            self._gaps.append(g)
-        self._dispatches += 1
+            self._h_gap.observe(g)
+        self._c_dispatches.inc()
+        if self.tracer.enabled:
+            # each dispatch span carries its own measured busy-grid gap, so
+            # the round-gap contract is checkable from the trace alone
+            self._disp_kind = kind
+            self._disp_args = {"rounds": int(rounds), "live": int(live)}
+            if g is not None:
+                self._disp_args["gap_s"] = g
+            self._disp_t0 = self.tracer.now()
+            try:  # profiler alignment is best-effort: never fail a dispatch
+                import jax.profiler
+                self._disp_ann = jax.profiler.TraceAnnotation(
+                    f"dispatch/{kind}")
+                self._disp_ann.__enter__()
+            except Exception:
+                self._disp_ann = None
 
     def _dispatch_done(self):
         """Called immediately AFTER the dispatch call returns (jax dispatch
         is async: the call returns once the work is enqueued, which is the
         moment the device stops needing the host)."""
         self._last_dispatch_done = time.monotonic()
+        if self.tracer.enabled:
+            if self._disp_ann is not None:
+                self._disp_ann.__exit__(None, None, None)
+                self._disp_ann = None
+            self.tracer.span(f"dispatch/{self._disp_kind}", self._disp_t0,
+                             round_idx=self.round_count, **self._disp_args)
+            self.tracer.counter("occupancy", self._disp_args.get("live", 0))
+            self.tracer.counter("queue_depth", len(self.queue))
 
     # -- shared step pieces ---------------------------------------------------
 
@@ -673,7 +816,8 @@ class ContinuousEngine:
         # ran == 0 (an async verify-only step): no round ran — unchanged
 
     def _finish_lane(self, item: QueueItem, i_seq, ru: int, chosen_k: int,
-                     sample, acc_round: int) -> tuple[int, SampleOut]:
+                     sample, acc_round: int, slot: int = -1,
+                     admit_wall: float = 0.0) -> tuple[int, SampleOut]:
         """Account one drained lane. ``acc_round`` is the absolute engine
         round at which the accept fired — equal to ``round_count`` at the
         drain in the synchronous engine, and ``admit_round + rounds_used``
@@ -682,9 +826,11 @@ class ContinuousEngine:
         # queue wait is measured from SUBMIT time — eviction/re-admission
         # cycles and queue reordering all land in the same number
         latency = acc_round - item.submit_round
+        missed = False
         if math.isfinite(item.deadline_round):
-            self._deadline_total += 1
-            self._deadline_misses += int(acc_round > item.deadline_round)
+            missed = acc_round > item.deadline_round
+            self._c_deadline_total.inc()
+            self._c_deadline_misses.inc(int(missed))
         res = SampleOut(sample=sample, rounds_used=ru,
                         accepted_core=chosen_k,
                         speedup=self.n / max(1, ru),
@@ -692,8 +838,21 @@ class ContinuousEngine:
         # item.rtol (not the float32 device mirror) so the table key
         # matches the one predictions are queried with
         self.cost.observe_accept(i_seq, item.rtol, ru)
-        self._latencies.append(latency)
-        self._speedups.append(res.speedup)
+        self._c_served.inc()
+        self._h_latency.observe(latency)
+        self._h_speedup.observe(res.speedup)
+        if self.tracer.enabled:
+            rid = item.payload.rid
+            self.tracer.span("request/compute", admit_wall,
+                             round_idx=acc_round, track=("slots", slot),
+                             rid=rid, rounds_used=ru, core=chosen_k,
+                             latency_rounds=latency)
+            if missed:
+                self.tracer.instant("deadline/miss", round_idx=acc_round,
+                                    rid=rid, slot=slot,
+                                    deadline=int(item.deadline_round),
+                                    latency_rounds=latency)
+            self._submit_wall.pop(rid, None)
         return (item.payload.rid, res)
 
     def step(self, max_rounds_on_device: int = 1
@@ -732,26 +891,30 @@ class ContinuousEngine:
         live_ct = sum(it is not None for it in self._slot_item)
         r_dev = max(1, int(max_rounds_on_device))
         if r_dev > 1 and self._amortizable():
-            self._mark_dispatch()
+            self._mark_dispatch("multi", rounds=r_dev, live=live_ct)
             st, ran_dev = self._prog.multi(self.state,
                                            jnp.asarray(r_dev, jnp.int32))
             self._dispatch_done()
             self.state = st
+            t0 = self.tracer.now()
             ran, done, rounds_used, chosen = jax.device_get(
                 (ran_dev, st.done, st.rounds_used, st.chosen))
             ran = int(ran)
         else:
-            self._mark_dispatch()
+            self._mark_dispatch("round", live=live_ct)
             self.state = self._prog.round(self.state)
             self._dispatch_done()
+            t0 = self.tracer.now()
             done, rounds_used, chosen = jax.device_get(
                 (self.state.done, self.state.rounds_used, self.state.chosen))
             ran = 1
-        self.host_syncs += 1
+        self.tracer.span("verify/readback", t0, round_idx=self.round_count,
+                         live=live_ct)
+        self._c_host_syncs.inc()
         self.round_count += ran
-        self._live_sum += live_ct * ran
-        self._slot_rounds += self.s * ran
-        self._wasted_sum += (self.s - live_ct) * ran
+        self._c_live.inc(live_ct * ran)
+        self._c_slot_rounds.inc(self.s * ran)
+        self._c_wasted.inc((self.s - live_ct) * ran)
 
         out: list[tuple[int, SampleOut]] = []
         drain = [slot for slot in range(self.s)
@@ -765,7 +928,8 @@ class ContinuousEngine:
             item = self._slot_item[slot]
             out.append(self._finish_lane(
                 item, self._slot_iseq[slot], int(rounds_used[slot]),
-                int(chosen[slot]), results[j], acc_round=self.round_count))
+                int(chosen[slot]), results[j], acc_round=self.round_count,
+                slot=slot, admit_wall=self._admit_wall[slot]))
             self._slot_item[slot] = None  # slot is free; done flag stays
             self._pred_done[slot] = None  # until the next admission clears
             # it (the lane is frozen)
@@ -831,7 +995,8 @@ class ContinuousEngine:
             r_dev = max(1, int(max_rounds_on_device))
             horizon = min(self._pred_done[s] - now for s in occupied)
             k = max(1, min(r_dev, horizon))
-            self._mark_dispatch()
+            self._mark_dispatch("roll" if k > 1 else "round", rounds=k,
+                                live=len(occupied))
             if k == 1:
                 self.state = self._prog.round(self.state)
             else:
@@ -840,9 +1005,9 @@ class ContinuousEngine:
             self._dispatch_done()
             self.round_count += k
             live_ct = len(occupied)
-            self._live_sum += live_ct * k
-            self._slot_rounds += self.s * k
-            self._wasted_sum += (self.s - live_ct) * k
+            self._c_live.inc(live_ct * k)
+            self._c_slot_rounds.inc(self.s * k)
+            self._c_wasted.inc((self.s - live_ct) * k)
             self._update_streak(live_ct, live_ct, k)
             return []
 
@@ -852,7 +1017,8 @@ class ContinuousEngine:
         # drain metadata BEFORE the decision may overwrite it (a confirmed
         # speculative admit re-targets the due slot in the same step)
         due_meta = {s: (self._slot_item[s], self._slot_iseq[s],
-                        self._admit_round[s]) for s in due}
+                        self._admit_round[s], self._admit_wall[s])
+                    for s in due}
         dec, undo, spec_admits = Decision(), None, []
         if want_decide:
             view = EngineView(
@@ -871,7 +1037,7 @@ class ContinuousEngine:
                 undo = self._apply_decision(dec, now=now,
                                             record_undo=need_verify)
                 if spec_admits:
-                    self._spec_count += 1
+                    self._c_spec.inc()
         # lanes presumed still running after the presumed drains: skip the
         # dispatch entirely when the grid would be empty (the synchronous
         # engine does not run a round on its final drain either)
@@ -879,7 +1045,8 @@ class ContinuousEngine:
                          + len(dec.admissions) - len(dec.evictions))
         dispatched = None
         if presumed_live > 0:
-            self._mark_dispatch()
+            self._mark_dispatch("round_keep" if need_verify else "round",
+                                live=presumed_live)
             dispatched = (self._prog.round_keep(self.state) if need_verify
                           else self._prog.round(self.state))
             self._dispatch_done()
@@ -889,16 +1056,22 @@ class ContinuousEngine:
         if need_verify:
             # ONE blocking readback per event step — the flags (and the due
             # results) of the round that finished while we were speculating
+            t0 = self.tracer.now()
             done, rounds_used, chosen, due_res = jax.device_get(
                 (prev.done, prev.rounds_used, prev.chosen,
                  prev.result[np.asarray(due, np.int32)]))
-            self.host_syncs += 1
+            self.tracer.span("verify/readback", t0, round_idx=now,
+                             due=len(due))
+            self._c_host_syncs.inc()
             failed = [s for s in spec_admits if not done[s]]
             if failed:
                 # -- reconcile: a speculative admit targeted a live lane --
-                self._spec_rollbacks += 1
+                self._c_spec_rollbacks.inc()
+                self.tracer.instant("spec/rollback", round_idx=now,
+                                    slots=list(failed),
+                                    wasted=int(dispatched is not None))
                 if dispatched is not None:
-                    self._spec_rounds_wasted += 1
+                    self._c_spec_wasted.inc()
                     self.round_count = now
                 dispatched = None
                 self.state = prev
@@ -917,16 +1090,23 @@ class ContinuousEngine:
                                       cost=self.cost)
                     self._apply_decision(self.policy.decide(view), now=now)
                 if any(it is not None for it in self._slot_item):
-                    self._mark_dispatch()
+                    self._mark_dispatch("round", live=sum(
+                        it is not None for it in self._slot_item))
                     dispatched = self._prog.round(self.state)
                     self._dispatch_done()
                     self.round_count = now + 1
             else:
                 if spec_admits:
-                    self._spec_confirms += 1
+                    self._c_spec_confirms.inc()
+                    self.tracer.instant("spec/confirm", round_idx=now,
+                                        slots=list(spec_admits))
                 adm_slots = {a.slot for a in dec.admissions}
                 out += self._drain_due(due, due_meta, done, rounds_used,
                                        chosen, due_res)
+                # lifecycle events of the now-confirmed speculative decision
+                # — emitted after the due drains so the replaced residents'
+                # spans close before the new residents' open
+                self._trace_commit_undo(undo, now)
                 for s in due:
                     if not done[s] and s not in adm_slots:
                         self._pred_done[s] = now + 1  # overdue: verify again
@@ -935,15 +1115,15 @@ class ContinuousEngine:
                 for s, it in enumerate(self._slot_item):
                     if it is not None and s not in due_meta \
                             and s not in adm_slots and done[s]:
-                        self._drain_lag_rounds += 1
+                        self._c_drain_lag.inc()
                         self._pred_done[s] = now + 1
 
         if dispatched is not None:
             self.state = dispatched
             live_ct = sum(it is not None for it in self._slot_item)
-            self._live_sum += live_ct
-            self._slot_rounds += self.s
-            self._wasted_sum += self.s - live_ct
+            self._c_live.inc(live_ct)
+            self._c_slot_rounds.inc(self.s)
+            self._c_wasted.inc(self.s - live_ct)
             self._update_streak(len(occupied), live_ct, 1)
         else:
             self._update_streak(
@@ -961,13 +1141,14 @@ class ContinuousEngine:
         lane's identity comes from ``due_meta`` and the slot is not freed."""
         out = []
         for j, s in enumerate(due):
-            item, i_seq, admit_round = due_meta[s]
+            item, i_seq, admit_round, admit_wall = due_meta[s]
             if not done[s]:
                 continue
             ru = int(rounds_used[s])
             out.append(self._finish_lane(item, i_seq, ru, int(chosen[s]),
                                          due_res[j],
-                                         acc_round=admit_round + ru))
+                                         acc_round=admit_round + ru,
+                                         slot=s, admit_wall=admit_wall))
             if self._slot_item[s] is item:
                 self._slot_item[s] = None  # freed; stale flags stay until
                 self._pred_done[s] = None  # the next admission (frozen lane)
@@ -993,53 +1174,64 @@ class ContinuousEngine:
         return served
 
     def stats(self) -> dict:
-        """Throughput + latency percentiles, all in lockstep-round units."""
-        lat = np.asarray(self._latencies, np.float64)
-        served = len(self._latencies)
+        """Throughput + latency percentiles, all in lockstep-round units.
+
+        Every value is rendered FROM the metrics registry (plus the handful
+        of structural attributes like the bucket ladder) — the dict is a
+        view, not a second set of books. Latency/speedup percentiles come
+        from bounded reservoirs: exact up to the reservoir capacity
+        (default 2048 served requests), an unbiased uniform-sample estimate
+        beyond; count/mean stay exact forever (see obs/metrics.py).
+        """
+        served = int(self._c_served.value)
         rounds = max(1, self.round_count)
+        deadline_total = int(self._c_deadline_total.value)
+        misses = int(self._c_deadline_misses.value)
+        # freshen the gauges so a registry snapshot taken after stats()
+        # carries the same numbers the dict shows
+        self.metrics.gauge("serve.rounds_total").set(float(self.round_count))
+        self.metrics.gauge("serve.queue_depth").set(float(len(self.queue)))
         return {
             "served": served,
             "rounds_total": self.round_count,
             "throughput_req_per_round": served / rounds,
-            "occupancy": self._live_sum / max(1, self._slot_rounds),
-            "latency_rounds_p50": float(np.percentile(lat, 50)) if served else 0.0,
-            "latency_rounds_p95": float(np.percentile(lat, 95)) if served else 0.0,
-            "mean_speedup": float(np.mean(self._speedups)) if served else 0.0,
+            "occupancy": (self._c_live.value
+                          / max(1, self._c_slot_rounds.value)),
+            "latency_rounds_p50": self._h_latency.percentile(50),
+            "latency_rounds_p95": self._h_latency.percentile(95),
+            "mean_speedup": self._h_speedup.mean,
             "policy": self.policy.name,
-            "host_syncs": self.host_syncs,
+            "host_syncs": int(self._c_host_syncs.value),
             # async-overlap accounting (all zero for overlap=False)
             "overlap": self.overlap,
-            "speculations": self._spec_count,
-            "speculation_confirms": self._spec_confirms,
-            "speculation_rollbacks": self._spec_rollbacks,
-            "speculated_rounds_wasted": self._spec_rounds_wasted,
-            "drain_lag_rounds": self._drain_lag_rounds,
+            "speculations": int(self._c_spec.value),
+            "speculation_confirms": int(self._c_spec_confirms.value),
+            "speculation_rollbacks": int(self._c_spec_rollbacks.value),
+            "speculated_rounds_wasted": int(self._c_spec_wasted.value),
+            "drain_lag_rounds": int(self._c_drain_lag.value),
             # round-gap timer: host-side monotonic gap between consecutive
             # device dispatches over a busy grid (~0 == device never starved)
-            "dispatches": self._dispatches,
-            "round_gap_count": self._gap_count,
-            "round_gap_mean_s": (self._gap_sum / self._gap_count
-                                 if self._gap_count else 0.0),
-            "round_gap_p95_s": (float(np.percentile(
-                np.asarray(self._gaps, np.float64), 95))
-                if self._gaps else 0.0),
-            "round_gap_max_s": self._gap_max,
-            "deadline_total": self._deadline_total,
-            "deadline_misses": self._deadline_misses,
-            "deadline_miss_rate": self._deadline_misses / self._deadline_total
-            if self._deadline_total else 0.0,
-            "preemptions": self._preempt_count,
-            "preempted_rounds_wasted": self._preempt_rounds_wasted,
+            "dispatches": int(self._c_dispatches.value),
+            "round_gap_count": self._h_gap.count,
+            "round_gap_mean_s": self._h_gap.mean,
+            "round_gap_p95_s": self._h_gap.percentile(95),
+            "round_gap_max_s": self._h_gap.max if self._h_gap.count else 0.0,
+            "deadline_total": deadline_total,
+            "deadline_misses": misses,
+            "deadline_miss_rate": (misses / deadline_total
+                                   if deadline_total else 0.0),
+            "preemptions": int(self._c_preempt.value),
+            "preempted_rounds_wasted": int(self._c_preempt_wasted.value),
             # elastic-capacity accounting
             "num_slots": self.s,
             "min_slots": self.min_slots,
             "max_slots": self.max_slots,
-            "wasted_slot_rounds": self._wasted_sum,
-            "resizes": self._resizes,
-            "grows": self._grow_count,
-            "shrinks": self._shrink_count,
-            "resize_vetoes": self._resize_vetoes,
-            "migrations": self._migrations,
+            "wasted_slot_rounds": int(self._c_wasted.value),
+            "resizes": int(self._c_resizes.value),
+            "grows": int(self._c_grows.value),
+            "shrinks": int(self._c_shrinks.value),
+            "resize_vetoes": int(self._c_vetoes.value),
+            "migrations": int(self._c_migrations.value),
             "buckets_visited": sorted(self._buckets_visited),
             "retraces": self.executor.retraces,
             "migration_traces": self.executor.migration_traces,
@@ -1050,3 +1242,16 @@ class ContinuousEngine:
             # model's calibrated predictions; see sched/README.md)
             "accept_rounds_observed": self.cost.accept_table_json(),
         }
+
+    def write_trace(self, path: str, meta: Optional[dict] = None) -> dict:
+        """Export this engine's trace + metrics snapshot as one Chrome
+        trace-event JSON artifact (open it in ui.perfetto.dev; verify it
+        with ``python -m repro.obs check``)."""
+        from repro.obs import write_chrome_trace
+        self.stats()  # refresh the snapshot gauges
+        info = {"engine": "continuous", "policy": self.policy.name,
+                "overlap": self.overlap, "n_steps": self.n, "k": self.k}
+        if meta:
+            info.update(meta)
+        return write_chrome_trace(path, self.tracer, metrics=self.metrics,
+                                  meta=info)

@@ -45,6 +45,19 @@ from repro.core.chords import (ChordsCarry, accept_from_sums, accept_test,
                                bmask, chords_init_carry, gather_slots,
                                make_round_body, make_slot_round_body,
                                reset_slots, slot_init_carry)
+from repro.obs import NULL_TRACER, MetricsRegistry
+
+
+def _scoped(name: str, fn: Callable) -> Callable:
+    """Wrap a program body in a ``jax.named_scope`` so profiler captures
+    (and compiled HLO metadata) attribute device time to the serve program
+    it belongs to. Trace-time only — it adds **no** jaxpr equations, so the
+    static-analysis passes over these bodies see identical programs."""
+    def wrapped(*args, **kwargs):
+        with jax.named_scope(name):
+            return fn(*args, **kwargs)
+    wrapped.__name__ = getattr(fn, "__name__", name)
+    return wrapped
 
 
 def ambient_sharding_tag() -> Optional[str]:
@@ -339,8 +352,12 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
             chosen=jnp.zeros((s,), jnp.int32),
         )
 
-    return {"round": round_fn, "admit": admit_fn, "multi": multi_fn,
-            "roll": roll_fn, "init_state": init_state}
+    tag = f"serve.grid_s{s}k{k}"
+    return {"round": _scoped(f"{tag}.round", round_fn),
+            "admit": _scoped(f"{tag}.admit", admit_fn),
+            "multi": _scoped(f"{tag}.multi", multi_fn),
+            "roll": _scoped(f"{tag}.roll", roll_fn),
+            "init_state": init_state}
 
 
 def _build_grid(drift, tgrid, n: int, spec: GridSpec,
@@ -423,8 +440,9 @@ def _build_stream_fn(drift, tgrid, n: int, spec: StreamSpec,
 def _build_stream(drift, tgrid, n: int, spec: StreamSpec,
                   use_kernel: bool, kernel_interpret: bool) -> Callable:
     """Build + jit the early-exit streaming program (StreamingSampler's)."""
-    return jax.jit(_build_stream_fn(drift, tgrid, n, spec,
-                                    use_kernel, kernel_interpret))
+    return jax.jit(_scoped(f"serve.stream_k{spec.num_cores}",
+                           _build_stream_fn(drift, tgrid, n, spec,
+                                            use_kernel, kernel_interpret)))
 
 
 class RoundExecutor:
@@ -441,7 +459,7 @@ class RoundExecutor:
 
     def __init__(self, drift: Callable, tgrid, n_steps: Optional[int] = None,
                  use_kernel: bool = False, kernel_interpret: bool = True,
-                 max_entries: int = 8):
+                 max_entries: int = 8, tracer=None, metrics=None):
         self.drift = drift
         self.tgrid = tgrid
         self.n = int(n_steps) if n_steps is not None \
@@ -454,15 +472,18 @@ class RoundExecutor:
         # use_kernel). False: the real Pallas lowering (TPU targets).
         self.kernel_interpret = kernel_interpret
         self.max_entries = max(1, int(max_entries))
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._grids: "collections.OrderedDict[GridSpec, GridPrograms]" = \
             collections.OrderedDict()
         self._streams: "collections.OrderedDict[StreamSpec, Callable]" = \
             collections.OrderedDict()
         # one jitted gather serves every migration pair — jax's own cache
         # keys it by shapes, so (S_src, S_dst) pairs each trace once
-        self._migrate = jax.jit(gather_slots)
-        self.retraces = 0          # grid-spec cache misses (compiles)
-        self.stream_traces = 0     # stream-spec cache misses
+        self._migrate = jax.jit(_scoped("serve.migrate", gather_slots))
+        self._c_retraces = self.metrics.counter("executor.retraces")
+        self._c_stream_traces = self.metrics.counter(
+            "executor.stream_traces")
 
     # -- caches ---------------------------------------------------------------
 
@@ -492,7 +513,11 @@ class RoundExecutor:
             lambda: _build_grid(self.drift, self.tgrid, self.n, spec,
                                 self.use_kernel, self.kernel_interpret),
             self.max_entries)
-        self.retraces += missed
+        if missed:
+            self._c_retraces.inc()
+            self.tracer.instant("retrace", kind="grid",
+                                spec=f"S={spec.num_slots},"
+                                     f"K={spec.num_cores}")
         return progs
 
     def stream(self, spec: StreamSpec) -> Callable:
@@ -503,7 +528,11 @@ class RoundExecutor:
             lambda: _build_stream(self.drift, self.tgrid, self.n, spec,
                                   self.use_kernel, self.kernel_interpret),
             self.max_entries)
-        self.stream_traces += missed
+        if missed:
+            self._c_stream_traces.inc()
+            self.tracer.instant("retrace", kind="stream",
+                                spec=f"K={spec.num_cores},"
+                                     f"batched={spec.batched}")
         return fn
 
     def migrate(self, src_spec: GridSpec, dst_spec: GridSpec) -> Callable:
@@ -572,6 +601,17 @@ class RoundExecutor:
                  jax.ShapeDtypeStruct((s_dst,), jnp.bool_),
                  jax.ShapeDtypeStruct((s_dst,), jnp.int32))))
         return records
+
+    @property
+    def retraces(self) -> int:
+        """Grid-spec cache misses (compiles) — a read view over the
+        ``executor.retraces`` counter."""
+        return int(self._c_retraces.value)
+
+    @property
+    def stream_traces(self) -> int:
+        """Stream-spec cache misses — view over ``executor.stream_traces``."""
+        return int(self._c_stream_traces.value)
 
     @property
     def migration_traces(self) -> int:

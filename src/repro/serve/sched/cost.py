@@ -49,7 +49,7 @@ class CostModel:
 
     def __init__(self, num_cores: int, n_steps: int,
                  priority_speedup: float = 1.25, accept_arrival: int = 2,
-                 ema_alpha: float = 0.25):
+                 ema_alpha: float = 0.25, metrics=None):
         self.k = num_cores
         self.n = n_steps
         self.priority_speedup = priority_speedup
@@ -58,6 +58,16 @@ class CostModel:
         self._ladder: List[List[int]] = []
         # (i_seq tuple, rtol) -> [ema_rounds, observation_count]
         self._accept_table: dict = {}
+        # metrics is the engine's registry when the engine built this model
+        # (trailing kwarg: every existing positional call site is unchanged)
+        if metrics is None:
+            from repro.obs import MetricsRegistry
+            metrics = MetricsRegistry()
+        self.metrics = metrics
+        self._c_observations = metrics.counter("sched.cost.observations")
+        self._c_predictions = metrics.counter("sched.cost.predictions")
+        self._g_keys = metrics.gauge("sched.cost.calibrated_keys")
+        self._h_accept = metrics.histogram("sched.cost.accept_rounds")
 
     # -- init-sequence ladder --------------------------------------------------
 
@@ -104,10 +114,13 @@ class CostModel:
         """
         if i_seq is None or rtol is None or rtol <= 0.0:
             return
+        self._c_observations.inc()
+        self._h_accept.observe(rounds)
         key = self._accept_key(i_seq, rtol)
         ent = self._accept_table.get(key)
         if ent is None:
             self._accept_table[key] = [float(rounds), 1]
+            self._g_keys.set(float(len(self._accept_table)))
         else:
             ent[0] = self.ema_alpha * rounds + (1 - self.ema_alpha) * ent[0]
             ent[1] += 1
@@ -125,6 +138,7 @@ class CostModel:
         Calibrated by the EMA of observed accepts for this exact
         ``(i_seq, rtol)`` when available; the ``accept_arrival`` heuristic
         is the cold-start default."""
+        self._c_predictions.inc()
         emit = scheduler.emit_rounds(list(i_seq), self.n)
         if rtol is not None and rtol <= 0.0:
             return int(emit[0])  # exact sequential fallback: worst case N
