@@ -32,6 +32,18 @@ a bare metrics snapshot results/serve_metrics.json; the run asserts
 ``python -m repro.obs check`` passes on it in-process (CI re-runs the CLI
 on the artifact).
 
+``--serve-lanes`` replays the bursty trace through a heterogeneous-lane
+engine in all three request modes — ``exact`` (must be bitwise-identical
+to the homogeneous engine, profile installed or not), ``adaptive``
+(stability-gated step skipping; asserted to cut mean rounds-to-finish by
+>= 25% while every final latent stays within the documented 5% relative
+error of exact), and ``draft`` (coarse draft lanes + skipping; 15% error
+bound) — and writes results/serve_lanes.json plus the top-level
+BENCH_serve.json perf-trajectory summary (rounds/request, wall-clock,
+skip rate, final-latent error per mode). A traced adaptive overlap run
+writes results/serve_lanes_trace.json and asserts
+``python -m repro.obs check`` (including its lane-commit pass) in-process.
+
 ``--kernels`` runs the Pallas kernel-library roofline report
 (``benchmarks.kernels``): per kernel, launch_meta-derived bytes/FLOPs
 cross-checked against an independent jaxpr-walk measurement (>5%
@@ -274,6 +286,161 @@ def serve_burst() -> dict:
     return out
 
 
+def serve_lanes() -> dict:
+    """Heterogeneous-lane modes on the bursty trace (CI tier-1).
+
+    The measured operating curve exact -> adaptive -> draft: each step
+    trades a documented final-latent error bound for fewer rounds-to-
+    finish. The bounds asserted here are the ones serve/README.md states.
+    """
+    import json
+    import os
+    import time
+
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from benchmarks.common import RESULTS_DIR
+    from repro.core import uniform_tgrid
+    from repro.obs import Tracer
+    from repro.obs.check import check as obs_check
+    from repro.serve import ContinuousEngine
+    from repro.serve.sched.workload import bursty_trace, drive
+
+    ERR_ADAPTIVE = 0.05  # documented relative-L2 bound, adaptive vs exact
+    ERR_DRAFT = 0.15     # documented relative-L2 bound, draft vs exact
+    n, k, slots, rtol = 16, 4, 4, 0.3
+    tg = uniform_tgrid(n, 0.98)
+    lam = jnp.linspace(0.1, 1.5, 4)
+
+    def drift(x, t):
+        return -x * lam
+
+    def run(label, mode, profile, tracer=None, overlap=False):
+        t0 = time.perf_counter()
+        eng = ContinuousEngine(drift, latent_shape=(4,), n_steps=n,
+                               num_cores=k, tgrid=tg, num_slots=slots,
+                               rtol=rtol, lane_profile=profile,
+                               overlap=overlap,
+                               tracer=tracer if tracer is not None
+                               else None)
+        reqs, arrivals = bursty_trace(n, rtol=rtol)
+        for r in reqs:
+            r.mode = mode
+        out = drive(eng, reqs, arrivals)
+        st = eng.stats()
+        st["wall_s"] = time.perf_counter() - t0
+        rounds = float(np.mean([o.rounds_used for o in out.values()]))
+        print(f"serve_lanes[{label}],mean_rounds={rounds:.2f},"
+              f"skips={st['lane_skips']},"
+              f"nonexact={st['lane_served_nonexact']},"
+              f"wall_s={st['wall_s']:.2f}")
+        return eng, out, st, rounds
+
+    def rel_err(out, ref):
+        errs = []
+        for rid, o in out.items():
+            a, b = np.asarray(o.sample), np.asarray(ref[rid].sample)
+            errs.append(float(np.linalg.norm(a - b)
+                              / max(np.linalg.norm(b), 1e-12)))
+        return errs
+
+    _, base_out, base_st, base_rounds = run("baseline", "exact", None)
+    _, ex_out, ex_st, ex_rounds = run("exact", "exact", "default")
+    _, ad_out, ad_st, ad_rounds = run("adaptive", "adaptive", "default")
+    _, dr_out, dr_st, dr_rounds = run("draft", "draft", "default")
+
+    # contract 1: exact mode on a lane-profile grid is BITWISE the
+    # homogeneous engine — installing the profile costs nothing
+    assert sorted(ex_out) == sorted(base_out)
+    for rid, o in ex_out.items():
+        assert o.rounds_used == base_out[rid].rounds_used, rid
+        assert np.array_equal(np.asarray(o.sample),
+                              np.asarray(base_out[rid].sample)), rid
+    assert ex_st["lane_skips"] == 0 and ex_st["lane_served_nonexact"] == 0
+
+    # contract 2 (the PR 10 acceptance bar): adaptive cuts measured mean
+    # rounds-to-finish by >= 25% at the documented error bound
+    reduction = 1.0 - ad_rounds / ex_rounds
+    ad_errs, dr_errs = rel_err(ad_out, base_out), rel_err(dr_out, base_out)
+    assert reduction >= 0.25, (ad_rounds, ex_rounds, reduction)
+    assert ad_st["lane_skips"] > 0, ad_st
+    assert max(ad_errs) <= ERR_ADAPTIVE, max(ad_errs)
+    # contract 3: draft stays within its (looser) documented bound and
+    # never runs MORE rounds than exact
+    assert max(dr_errs) <= ERR_DRAFT, max(dr_errs)
+    assert dr_rounds <= ex_rounds, (dr_rounds, ex_rounds)
+    print(f"serve_lanes,reduction={reduction:.1%},"
+          f"err_adaptive_max={max(ad_errs):.4f},"
+          f"err_draft_max={max(dr_errs):.4f},"
+          f"skip_rate={ad_st['lane_skip_rate']['adaptive']:.3f}")
+
+    # traced adaptive overlap run: lane instants must survive the
+    # speculative host loop and pass the obs lane-commit check
+    tracer = Tracer()
+    tr_eng, tr_out, tr_st, _ = run("adaptive-async", "adaptive", "default",
+                                   tracer=tracer, overlap=True)
+    for rid, o in tr_out.items():  # async lane loop is deterministic
+        assert o.rounds_used == ad_out[rid].rounds_used, rid
+        assert np.array_equal(np.asarray(o.sample),
+                              np.asarray(ad_out[rid].sample)), rid
+    trace_path = os.path.join(RESULTS_DIR, "serve_lanes_trace.json")
+    doc = tr_eng.write_trace(trace_path,
+                             meta={"benchmark": "serve_lanes",
+                                   "run": "adaptive-async"})
+    assert "lane/skip" in {e["name"] for e in doc["traceEvents"]}
+    ok, report = obs_check(doc)
+    for line in report:
+        print(f"serve_lanes[obs]{line}")
+    assert ok, "python -m repro.obs check would fail on serve_lanes_trace"
+
+    def mode_row(st, rounds, errs):
+        return {"mean_rounds_per_request": rounds,
+                "wall_s": st["wall_s"],
+                "lane_skips": st["lane_skips"],
+                "skip_rate": st["lane_skip_rate"],
+                "final_latent_rel_err_max": max(errs) if errs else 0.0,
+                "final_latent_rel_err_mean": (float(np.mean(errs))
+                                              if errs else 0.0)}
+
+    out = {"n_steps": n, "num_cores": k, "num_slots": slots, "rtol": rtol,
+           "requests": len(base_out),
+           "lane_profile": ex_st["lane_profile"],
+           "rounds_reduction_adaptive_vs_exact": reduction,
+           "error_bounds": {"adaptive": ERR_ADAPTIVE, "draft": ERR_DRAFT},
+           "baseline": mode_row(base_st, base_rounds, []),
+           "exact": mode_row(ex_st, ex_rounds,
+                             rel_err(ex_out, base_out)),
+           "adaptive": mode_row(ad_st, ad_rounds, ad_errs),
+           "draft": mode_row(dr_st, dr_rounds, dr_errs),
+           "adaptive_async": mode_row(
+               tr_st, float(np.mean([o.rounds_used
+                                     for o in tr_out.values()])),
+               rel_err(tr_out, base_out))}
+    with open(os.path.join(RESULTS_DIR, "serve_lanes.json"), "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    # top-level perf-trajectory summary: the headline numbers a reader
+    # (or the next PR) compares against without digging into results/
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    bench = {"benchmark": "serve_lanes",
+             "modes": {m: {"mean_rounds_per_request":
+                           out[m]["mean_rounds_per_request"],
+                           "wall_s": out[m]["wall_s"],
+                           "final_latent_rel_err_max":
+                           out[m]["final_latent_rel_err_max"]}
+                       for m in ("exact", "adaptive", "draft")},
+             "rounds_reduction_adaptive_vs_exact": reduction,
+             "adaptive_skip_rate": ad_st["lane_skip_rate"]["adaptive"],
+             "error_bounds": out["error_bounds"]}
+    with open(os.path.join(repo_root, "BENCH_serve.json"), "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+    print(f"serve_lanes,rounds_exact={ex_rounds:.2f},"
+          f"rounds_adaptive={ad_rounds:.2f},rounds_draft={dr_rounds:.2f},"
+          f"reduction={reduction:.1%}")
+    return out
+
+
 def main() -> None:
     if "--kernels" in sys.argv:
         from benchmarks.kernels import kernels_report
@@ -288,6 +455,10 @@ def main() -> None:
         serve_burst()
         print("serve_burst,OK")
         return
+    if "--serve-lanes" in sys.argv:
+        serve_lanes()
+        print("serve_lanes,OK")
+        return
 
     from benchmarks import tables
     from benchmarks.roofline import (grad_wire_report, load_cells,
@@ -296,6 +467,7 @@ def main() -> None:
     tables.run_all()
     serve_smoke()
     serve_burst()
+    serve_lanes()
 
     cells = load_cells()
     if cells:

@@ -48,5 +48,6 @@ def run_all(vmem_budget_bytes: int = None, sharding: bool = True,
         report.extend(pallas_check.check_oracle(
             case.name, case.op, case.ref, case.op_args, case.ref_args))
     if sharding:
-        report.extend(sharding_check.run(ex, surface.grid_ladder()))
+        report.extend(sharding_check.run(
+            ex, surface.grid_ladder() + surface.lane_grid_ladder()))
     return report

@@ -35,7 +35,7 @@ def slot_state_axes(spec):
     """Logical-axes tree matching ``_slot_state_structs(spec)`` leaf for
     leaf (see ``serve/README.md``: slots ride 'data', cores stay local
     when slots already hold it)."""
-    from repro.core.chords import ChordsCarry
+    from repro.core.chords import ChordsCarry, LaneState
     from repro.serve.executor import SlotState
 
     nlat = len(spec.latent_shape)
@@ -43,11 +43,16 @@ def slot_state_axes(spec):
     lat = ("slots",) + (None,) * nlat
     sk = ("slots", "cores")
     s = ("slots",)
+    # a heterogeneous grid carries per-lane state ([S,K] counters + [S]
+    # gates); a homogeneous one carries the zero-leaf empty tuple
+    lanes = LaneState(pos=sk, f_norm=sk, stab=sk, skips=sk,
+                      draft_on=s, skip_tau=s) \
+        if getattr(spec, "lane_profile", None) is not None else ()
     return SlotState(
         carry=ChordsCarry(x=grid_lat, x_snap=grid_lat, f_snap=grid_lat,
                           p=sk, finals=grid_lat),
         i_arr=sk, rtol=s, rounds=s, live=s, done=s, has_last=s,
-        last_out=lat, result=lat, rounds_used=s, chosen=s)
+        last_out=lat, result=lat, rounds_used=s, chosen=s, lanes=lanes)
 
 
 def data_axis_size(device_count: int, slot_counts: Sequence[int]) -> int:
@@ -89,7 +94,9 @@ def check_grid_round(executor, spec, mesh, rules,
             grid_specs=[tagged]) if r.kind == "round")
         st = rec.args[0]
         axes = slot_state_axes(tagged)
-        is_leaf = lambda x: isinstance(x, tuple) and all(
+        # nonempty: the homogeneous SlotState.lanes placeholder () must
+        # stay a zero-leaf container, not become an axis-tuple leaf
+        is_leaf = lambda x: isinstance(x, tuple) and len(x) > 0 and all(
             isinstance(a, (str, type(None))) for a in x)
         sh = jax.tree_util.tree_map(
             lambda ax, leaf: ctx.sharding(ax, tuple(leaf.shape)),

@@ -55,6 +55,22 @@ def stream_specs() -> List:
                       batched=b) for b in (False, True)]
 
 
+def lane_grid_ladder(min_slots: int = MIN_SLOTS, max_slots: int = MAX_SLOTS
+                     ) -> List:
+    """The heterogeneous-lane variant of :func:`grid_ladder`: every bucket
+    with the default draft/refine lane profile for ``NUM_CORES``. Kept as a
+    SEPARATE ladder — a homogeneous grid carries no ``LaneState`` pytree, so
+    migrate pairs must never mix the two families."""
+    from repro.core.chords import default_lane_profile
+    from repro.serve.engine import bucket_ladder
+    from repro.serve.executor import GridSpec
+
+    profile = default_lane_profile(NUM_CORES)
+    return [GridSpec(num_slots=s, num_cores=NUM_CORES,
+                     latent_shape=LATENT_SHAPE, lane_profile=profile)
+            for s in bucket_ladder(min_slots, max_slots)]
+
+
 def migrate_pairs(ladder=None) -> List[Tuple]:
     """Adjacent-bucket (src, dst) GridSpec pairs, both directions
     (grow + shrink)."""
@@ -68,8 +84,10 @@ def migrate_pairs(ladder=None) -> List[Tuple]:
 def enumerate_serve_programs(executor=None) -> List:
     ex = make_executor() if executor is None else executor
     return ex.enumerate_programs(
-        grid_specs=grid_ladder(), stream_specs=stream_specs(),
-        stream_latent_shape=LATENT_SHAPE, migrate_pairs=migrate_pairs())
+        grid_specs=grid_ladder() + lane_grid_ladder(),
+        stream_specs=stream_specs(),
+        stream_latent_shape=LATENT_SHAPE,
+        migrate_pairs=migrate_pairs() + migrate_pairs(lane_grid_ladder()))
 
 
 class KernelCase(NamedTuple):

@@ -3,9 +3,14 @@ from repro.core.baselines import BaselineResult, paradigms_sample, srds_sample  
 from repro.core.chords import (  # noqa: F401
     ChordsCarry,
     ChordsResult,
+    LaneSpec,
+    LaneState,
     accept_test,
     chords_sample,
+    default_lane_profile,
+    lane_init_state,
     make_slot_round_body,
+    reset_lanes,
     reset_slots,
     select_output,
     slot_init_carry,
@@ -20,6 +25,12 @@ from repro.core.init_sequence import (  # noqa: F401
     uniform_sequence,
 )
 from repro.core.ode import DriftFn, GaussianMixture, exponential_drift, uniform_tgrid  # noqa: F401
-from repro.core.rectify import rectified_step, rectify_delta  # noqa: F401
+from repro.core.rectify import (  # noqa: F401
+    coarse_smooth,
+    downsample_latent,
+    rectified_step,
+    rectify_delta,
+    upsample_latent,
+)
 from repro.core.reward import reward, speedup_cont  # noqa: F401
-from repro.core.solvers import sequential_sample  # noqa: F401
+from repro.core.solvers import draft_drift, sequential_sample  # noqa: F401

@@ -20,11 +20,23 @@ slot×core grid with a per-slot init sequence and round counter, which is what
 lets the continuous-batching runtime admit/drain requests mid-flight without
 retracing (``repro.serve.engine``): finished lanes are re-initialized in
 place with :func:`reset_slots`.
+
+Heterogeneous lanes (draft-and-refine + stability-adaptive skipping): with a
+``lane_profile`` (a tuple of :class:`LaneSpec`), a slot's K cores become
+*asymmetric*. Draft-role lanes evaluate the drift at reduced latent
+resolution (``rectify.coarse_smooth`` — DRiffusion's cheap draft passes) and
+their snapshots become the rectification targets the refine lanes correct;
+every skip-eligible lane maintains a SADA-style stability statistic (EMA of
+the relative drift-norm delta, :class:`LaneState`) that gates an Euler
+double-step once the trajectory settles. Both mechanisms are pure
+``where``-masks over the same static grid — per-request gates
+(``draft_on``/``skip_tau``) select the behavior at runtime with no retrace,
+and all-false gates reproduce the homogeneous round bitwise.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +44,61 @@ import numpy as np
 
 from repro.core import scheduler
 from repro.core.ode import DriftFn
+from repro.core.rectify import coarse_smooth
 from repro.dist.sharding import vmap_logical
+
+# EMA weight of the per-lane stability statistic (relative drift-norm delta).
+# 0.5 keeps ~2 rounds of memory: fast enough to warm up inside the short
+# fine phase of a serve-sized grid, smooth enough to not skip on one quiet
+# round. The skip threshold itself is per-request (``LaneState.skip_tau``).
+STAB_ALPHA = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneSpec:
+    """Static per-core lane role inside one slot (hashable: rides GridSpec).
+
+    role: "refine" evaluates the exact drift; "draft" evaluates it at
+        reduced resolution (``coarse_factor``-pooled innermost latent axis)
+        when the resident request opted in (``draft_on`` gate).
+    skip: lane is eligible for stability-gated step skipping (activated per
+        request by a nonzero ``skip_tau``). Core 0 must stay
+        ``refine``/no-skip — it anchors the sequential-exactness guarantee
+        (rtol<=0 force-accept) in every mode.
+    """
+
+    role: str = "refine"
+    coarse_factor: int = 1
+    skip: bool = False
+
+
+def default_lane_profile(k: int) -> Tuple[LaneSpec, ...]:
+    """Canonical heterogeneous profile: the fastest ~quarter of the cores
+    are draft lanes (coarse factor 2), the fast half is skip-eligible, and
+    the slow half — including the core-0 anchor — stays exact refine."""
+    if k <= 1:
+        return (LaneSpec(),)
+    n_draft = max(1, k // 4)
+    return tuple(
+        LaneSpec(role="draft" if c >= k - n_draft else "refine",
+                 coarse_factor=2 if c >= k - n_draft else 1,
+                 skip=c >= (k + 1) // 2)
+        for c in range(k))
+
+
+class LaneState(NamedTuple):
+    """Per-lane heterogeneous-execution state riding next to ChordsCarry.
+
+    Grid layout ``[S, K]`` (per-core) / ``[S]`` (per-slot gates); inside the
+    per-slot vmap the leading S axis is stripped.
+    """
+
+    pos: jax.Array       # [S, K] int32 — committed skip-advance offset
+    f_norm: jax.Array    # [S, K] f32 — last drift norm (0 = none seen yet)
+    stab: jax.Array      # [S, K] f32 — drift-delta EMA (init 1 = unsettled)
+    skips: jax.Array     # [S, K] int32 — committed skips this residency
+    draft_on: jax.Array  # [S] bool — request opted into draft smoothing
+    skip_tau: jax.Array  # [S] f32 — skip threshold; 0 disables skipping
 
 
 class ChordsCarry(NamedTuple):
@@ -187,6 +253,146 @@ def _make_round_step(drift: DriftFn, tgrid, n: int, k: int,
     return step_accept if fuse_accept else step
 
 
+def _make_lane_round_step(drift: DriftFn, tgrid, n: int, k: int,
+                          profile: Sequence[LaneSpec],
+                          use_kernel: bool = False,
+                          kernel_interpret: bool = True,
+                          fuse_accept: bool = False):
+    """Heterogeneous-lane variant of :func:`_make_round_step`.
+
+    Same contract, plus a :class:`LaneState` threaded through the step:
+    ``step(carry, lanes, i_arr, r) -> ((carry, lanes), emitted)`` (and the
+    ``fuse_accept`` twin taking ``prev``). Three masked mechanisms on top of
+    the homogeneous round, all data-dependent selects on one static graph:
+
+    * **skip offset** — ``lanes.pos`` counts committed double-steps, so a
+      lane's true position is ``scheduler.positions(...) + pos``. A skip
+      replaces ``nxt = cur+1`` with ``cur+2``: one Euler step spanning two
+      grid cells through the same ``step_rectify`` dt operands.
+    * **draft smoothing** — draft-role lanes (request gate ``draft_on``)
+      see the coarse-smoothed latent and emit the coarse-smoothed drift:
+      one drift eval either way, so draft lanes change bandwidth/quality,
+      never NFE. Their snapshots are the rectification targets the refine
+      lanes correct.
+    * **stability gate** — skip only when the relative drift-delta EMA is
+      below the request's ``skip_tau`` AND the hop is safe: fine phase, in
+      grid, not a rectification round, and never over the lane's own
+      snapshot position or the downstream lane's (a hopped snapshot would
+      stall that lane's rectification cadence for the rest of the solve).
+
+    With both gates off (``draft_on=False``, ``skip_tau=0``) every select
+    takes its exact-branch operand, reproducing the homogeneous round
+    bitwise — that is the ``mode="exact"`` contract.
+    """
+    from repro.kernels.rectify.ops import step_rectify, step_rectify_accept
+    vdrift = vmap_logical(drift, "cores", in_axes=(0, 0))
+
+    profile = tuple(profile)
+    if len(profile) != k:
+        raise ValueError(f"lane profile has {len(profile)} specs for K={k}")
+    if profile[0].role != "refine" or profile[0].skip:
+        raise ValueError("core 0 must be a refine/no-skip lane: it anchors "
+                         "the sequential-exactness guarantee")
+    factors = {sp.coarse_factor for sp in profile if sp.role == "draft"}
+    if len(factors) > 1:
+        raise ValueError(f"draft lanes must share one coarse_factor: "
+                         f"{sorted(factors)}")
+    factor = factors.pop() if factors else 1
+    draft_role = jnp.asarray([sp.role == "draft" for sp in profile])
+    skip_role = jnp.asarray([bool(sp.skip) for sp in profile])
+
+    def _common(carry: ChordsCarry, lanes: LaneState, i_arr, r):
+        x, x_snap, f_snap, p, finals = carry
+        base_cur, base_nxt = scheduler.positions(i_arr, r)
+        cur = base_cur + lanes.pos
+        nxt = base_nxt + lanes.pos
+        alive = cur <= n - 1
+        t_cur = tgrid[jnp.clip(cur, 0, n)]
+
+        # draft lanes: drift of/at the coarse-smoothed latent (one eval)
+        draft_m = draft_role & lanes.draft_on & alive
+        x_eval = jnp.where(bmask(draft_m, x), coarse_smooth(x, factor), x)
+        f_raw = vdrift(x_eval, t_cur)
+        f = jnp.where(bmask(draft_m, f_raw), coarse_smooth(f_raw, factor),
+                      f_raw)
+
+        # SADA-style stability statistic: EMA of the relative drift-norm
+        # delta between consecutive rounds (1.0 until two norms are seen)
+        axes = tuple(range(1, x.ndim))
+        f_mag = jnp.sqrt(jnp.sum(jnp.square(f.astype(jnp.float32)),
+                                 axis=axes))
+        rel = jnp.where(lanes.f_norm > 0.0,
+                        jnp.abs(f_mag - lanes.f_norm) / (f_mag + 1e-6), 1.0)
+        stab = jnp.where(alive,
+                         STAB_ALPHA * rel + (1.0 - STAB_ALPHA) * lanes.stab,
+                         lanes.stab)
+        f_norm = jnp.where(alive, f_mag, lanes.f_norm)
+
+        # snapshot refresh: core is sitting exactly on its snapshot position
+        at_snap = (cur == p) & alive
+        x_snap = jnp.where(bmask(at_snap, x), x, x_snap)
+        f_snap = jnp.where(bmask(at_snap, f), f, f_snap)
+
+        # rectification: previous core sits on this core's snapshot position
+        x_up = jnp.roll(x, 1, axis=0)
+        f_up = jnp.roll(f, 1, axis=0)
+        cur_up = jnp.roll(cur, 1, axis=0)
+        k0 = jnp.arange(k)
+        fire = (k0 > 0) & (cur_up == p) & alive
+
+        # stability-gated double-step (fine phase only; nxt<n keeps the hop
+        # in-grid; hopping p / p_down would strand a snapshot position)
+        fine = r > k0
+        p_down = jnp.roll(p, -1, axis=0)
+        skip = (skip_role & (lanes.skip_tau > 0.0) & (stab < lanes.skip_tau)
+                & fine & alive & ~fire & (nxt < n)
+                & (cur + 1 != p) & (cur + 1 != p_down))
+        nxt = jnp.where(skip, cur + 2, nxt)
+
+        t_nxt = tgrid[jnp.clip(nxt, 0, n)]
+        t_p = tgrid[jnp.clip(p, 0, n)]
+        new_lanes = LaneState(pos=lanes.pos + skip.astype(jnp.int32),
+                              f_norm=f_norm, stab=stab,
+                              skips=lanes.skips + skip.astype(jnp.int32),
+                              draft_on=lanes.draft_on,
+                              skip_tau=lanes.skip_tau)
+        return (x, x_snap, f_snap, p, finals, f, x_up, f_up,
+                nxt, alive, fire, t_cur, t_nxt, t_p, new_lanes)
+
+    def _finish(x, x_new, x_snap, f_snap, p, finals, nxt, alive, fire,
+                new_lanes):
+        x_snap = jnp.where(bmask(fire, x_new), x_new, x_snap)
+        p = jnp.where(fire, nxt, p)
+        x = jnp.where(bmask(alive, x_new), x_new, x)
+        emitted = (nxt == n) & alive
+        finals = jnp.where(bmask(emitted, x), x, finals)
+        return (ChordsCarry(x, x_snap, f_snap, p, finals), new_lanes), emitted
+
+    def step(carry: ChordsCarry, lanes: LaneState, i_arr, r):
+        (x, x_snap, f_snap, p, finals, f, x_up, f_up, nxt, alive, fire,
+         t_cur, t_nxt, t_p, new_lanes) = _common(carry, lanes, i_arr, r)
+        x_new = step_rectify(x, f, x_up, f_up, x_snap, f_snap,
+                             t_nxt - t_cur, t_nxt - t_p, fire,
+                             use_kernel=use_kernel,
+                             interpret=kernel_interpret)
+        return _finish(x, x_new, x_snap, f_snap, p, finals, nxt, alive,
+                       fire, new_lanes)
+
+    def step_accept(carry: ChordsCarry, lanes: LaneState, i_arr, r, prev):
+        (x, x_snap, f_snap, p, finals, f, x_up, f_up, nxt, alive, fire,
+         t_cur, t_nxt, t_p, new_lanes) = _common(carry, lanes, i_arr, r)
+        prev_k = jnp.broadcast_to(prev[None], x.shape).astype(x.dtype)
+        x_new, err_sq, out_sq = step_rectify_accept(
+            x, f, x_up, f_up, x_snap, f_snap, prev_k,
+            t_nxt - t_cur, t_nxt - t_p, fire,
+            use_kernel=use_kernel, interpret=kernel_interpret)
+        pair, emitted = _finish(x, x_new, x_snap, f_snap, p, finals,
+                                nxt, alive, fire, new_lanes)
+        return pair, (emitted, err_sq, out_sq)
+
+    return step_accept if fuse_accept else step
+
+
 def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
                     collect_trace: bool = False, use_kernel: bool = False,
                     kernel_interpret: bool = True):
@@ -206,7 +412,8 @@ def make_round_body(drift: DriftFn, tgrid, i_arr, n: int, k: int,
 def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int,
                          use_kernel: bool = False,
                          kernel_interpret: bool = True,
-                         fuse_accept: bool = False):
+                         fuse_accept: bool = False,
+                         lane_profile: Optional[Sequence[LaneSpec]] = None):
     """One lockstep round over a fixed [S, K, ...] slot×core grid.
 
     Each slot is an independent request lane with its own init sequence
@@ -229,7 +436,47 @@ def make_slot_round_body(drift: DriftFn, tgrid, n: int, k: int,
     whatever the frozen garbage latents reduce to (possibly NaN) — callers
     gate the accept decision on ``emitted``/``live``/``has_last`` masks, so
     those values never escape.
+
+    With a ``lane_profile`` the round becomes the heterogeneous variant
+    (:func:`_make_lane_round_step`): a :class:`LaneState` grid rides next to
+    the carry and both signatures gain it in second position —
+    ``lane_round(carry, lanes, i_arr, r, live[, prev]) -> (carry, lanes,
+    emitted[, err_sq, out_sq])``. Dead-lane freezing covers the lane state
+    too, so speculative rollback and drain semantics are unchanged.
     """
+    if lane_profile is not None:
+        lstep = _make_lane_round_step(drift, tgrid, n, k, lane_profile,
+                                      use_kernel=use_kernel,
+                                      kernel_interpret=kernel_interpret,
+                                      fuse_accept=fuse_accept)
+
+        if fuse_accept:
+            lvstep = vmap_logical(lstep, "slots", in_axes=(0, 0, 0, 0, 0))
+
+            def lane_round_accept(carry: ChordsCarry, lanes: LaneState,
+                                  i_arr, r, live, prev):
+                ((new_carry, new_lanes),
+                 (emitted, err_sq, out_sq)) = lvstep(carry, lanes, i_arr,
+                                                     r, prev)
+                frozen_c, frozen_l = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(bmask(live, new), new, old),
+                    (new_carry, new_lanes), (carry, lanes))
+                return (frozen_c, frozen_l, emitted & live[:, None],
+                        err_sq, out_sq)
+
+            return lane_round_accept
+
+        lvstep = vmap_logical(lstep, "slots", in_axes=(0, 0, 0, 0))
+
+        def lane_round(carry: ChordsCarry, lanes: LaneState, i_arr, r, live):
+            (new_carry, new_lanes), emitted = lvstep(carry, lanes, i_arr, r)
+            frozen_c, frozen_l = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(bmask(live, new), new, old),
+                (new_carry, new_lanes), (carry, lanes))
+            return frozen_c, frozen_l, emitted & live[:, None]
+
+        return lane_round
+
     step = _make_round_step(drift, tgrid, n, k, use_kernel=use_kernel,
                             kernel_interpret=kernel_interpret,
                             fuse_accept=fuse_accept)
@@ -291,6 +538,34 @@ def reset_slots(carry: ChordsCarry, mask, x0, i_arr) -> ChordsCarry:
         f_snap=jnp.where(m, 0.0, carry.f_snap),
         p=jnp.where(mask[:, None], i_arr, carry.p),
         finals=jnp.where(m, 0.0, carry.finals),
+    )
+
+
+def lane_init_state(num_slots: int, k: int) -> LaneState:
+    """Idle [S, K] lane state: zero offsets, unsettled stability, all
+    heterogeneous gates off (so the grid behaves exactly until an admission
+    opts a slot in via :func:`reset_lanes`)."""
+    zi = jnp.zeros((num_slots, k), jnp.int32)
+    zf = jnp.zeros((num_slots, k), jnp.float32)
+    return LaneState(pos=zi, f_norm=zf,
+                     stab=jnp.ones((num_slots, k), jnp.float32),
+                     skips=zi,
+                     draft_on=jnp.zeros((num_slots,), bool),
+                     skip_tau=jnp.zeros((num_slots,), jnp.float32))
+
+
+def reset_lanes(lanes: LaneState, mask, draft_on, skip_tau) -> LaneState:
+    """Lane-state companion of :func:`reset_slots`: re-arm masked slots with
+    the admitted request's heterogeneous gates (``draft_on``: [S] bool,
+    ``skip_tau``: [S] f32 — rows read only where ``mask``)."""
+    m = mask[:, None]
+    return LaneState(
+        pos=jnp.where(m, 0, lanes.pos),
+        f_norm=jnp.where(m, 0.0, lanes.f_norm),
+        stab=jnp.where(m, 1.0, lanes.stab),
+        skips=jnp.where(m, 0, lanes.skips),
+        draft_on=jnp.where(mask, draft_on, lanes.draft_on),
+        skip_tau=jnp.where(mask, skip_tau, lanes.skip_tau),
     )
 
 

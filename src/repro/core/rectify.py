@@ -31,3 +31,40 @@ def rectified_step(x, f, t, t_next, x_slow, f_slow, x_snap, f_snap, t_snap, fire
     rect = rectify_delta(x_slow, f_slow, x_snap, f_snap, t_next - t_snap)
     delta = jnp.where(fire, delta + rect, delta)
     return x + delta, delta
+
+
+# -- coarse <-> fine latent resampling (heterogeneous draft lanes) -----------
+#
+# Draft lanes run the drift at reduced latent resolution: the latent is
+# avg-pooled along its innermost axis before the network call and the
+# resulting velocity is expanded back, so a draft pass is a smoothed (cheap
+# in bandwidth, lossy in detail) view of the exact drift. The pair is shape
+# preserving for any last-axis length (edge padding to a factor multiple),
+# which keeps the [S, K, ...] grid static — draft lanes differ from refine
+# lanes only by this masked smoothing, never by shape.
+
+def downsample_latent(x, factor: int):
+    """Avg-pool the innermost latent axis by ``factor`` (edge-padded)."""
+    if factor <= 1:
+        return x
+    length = x.shape[-1]
+    pad = (-length) % factor
+    if pad:
+        x = jnp.concatenate([x, jnp.repeat(x[..., -1:], pad, axis=-1)],
+                            axis=-1)
+    coarse = (length + pad) // factor
+    return x.reshape(x.shape[:-1] + (coarse, factor)).mean(axis=-1)
+
+
+def upsample_latent(x, factor: int, length: int):
+    """Nearest-neighbor expand of the innermost axis back to ``length``."""
+    if factor <= 1:
+        return x
+    return jnp.repeat(x, factor, axis=-1)[..., :length]
+
+
+def coarse_smooth(x, factor: int):
+    """Round-trip ``downsample_latent`` -> ``upsample_latent``: the
+    reduced-resolution view of ``x`` at its original shape (identity for
+    ``factor <= 1``)."""
+    return upsample_latent(downsample_latent(x, factor), factor, x.shape[-1])

@@ -44,3 +44,26 @@ def sequential_sample(drift: DriftFn, x0, tgrid, method: str = "euler",
 
 def nfe_per_step(method: str) -> int:
     return {"euler": 1, "heun": 2}[method]
+
+
+def draft_drift(drift: DriftFn, coarse_factor: int) -> DriftFn:
+    """Cheap draft-solver drift: evaluate at reduced latent resolution.
+
+    Wraps ``drift`` in the ``rectify.coarse_smooth`` down/up-sample pair —
+    the latent is smoothed before the network call and the velocity smoothed
+    after, so the draft pass sees (and produces) only the coarse content.
+    Shape-preserving, 1 NFE, and exactly the per-core computation the
+    heterogeneous round body applies under its draft mask
+    (``core.chords.make_slot_round_body`` with a lane profile); kept
+    standalone as the oracle that masked path is tested against.
+    """
+    from repro.core.rectify import coarse_smooth
+
+    if coarse_factor <= 1:
+        return drift
+
+    def cheap(x, t):
+        return coarse_smooth(drift(coarse_smooth(x, coarse_factor), t),
+                             coarse_factor)
+
+    return cheap

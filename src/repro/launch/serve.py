@@ -28,6 +28,15 @@ after ``--resize-hysteresis`` rounds of sustained low occupancy (policies
 can veto a shrink that would endanger a queued deadline). Omitting both
 keeps the fixed-S grid bit-for-bit.
 
+``--lane-mode {exact,adaptive,draft}`` serves every request at that point
+on the heterogeneous-lane operating curve (serve/README.md): the engine is
+built with the default draft+skip lane profile and each request opts into
+the given mode. ``exact`` on a lane-profiled grid is bitwise-identical to
+the homogeneous engine; ``adaptive`` enables SADA-style stability-gated
+step skipping (≤5% relative error on the serve workload); ``draft``
+additionally runs the coarse draft lane (≤15%). Omit the flag to keep the
+homogeneous grid entirely.
+
   PYTHONPATH=src python -m repro.launch.serve --arch chords-dit-xl --reduced \
       --requests 8 --steps 50 --cores 8 --slots 4 \
       --policy edf-preempt --deadline-rounds 60 --device-rounds 8
@@ -86,6 +95,19 @@ def main():
                          "cost-model-predicted completion rounds only "
                          "(bitwise-identical results; mispredictions are "
                          "rolled back, bounded and counted)")
+    ap.add_argument("--lane-mode", default=None,
+                    choices=["exact", "adaptive", "draft"],
+                    help="serve every request at this heterogeneous-lane "
+                         "operating point (builds the engine with the "
+                         "default draft+skip lane profile; 'exact' stays "
+                         "bitwise-identical to the homogeneous grid). "
+                         "Omit for the homogeneous engine (continuous "
+                         "engine only)")
+    ap.add_argument("--lane-skip-tau", type=float, default=0.4,
+                    help="stability threshold for lane step skipping: a "
+                         "skip-enabled lane double-steps once its drift "
+                         "stability EMA falls below tau (adaptive/draft "
+                         "modes only)")
     ap.add_argument("--use-kernels", action="store_true",
                     help="route the Pallas kernel library through the "
                          "whole hot path: the backbone's rmsnorm / "
@@ -109,6 +131,9 @@ def main():
     tgrid = uniform_tgrid(args.steps)
 
     if args.static:
+        if args.lane_mode:
+            ap.error("--lane-mode requires the continuous engine "
+                     "(drop --static)")
         # the static engine stacks requests on axis 0, giving the drift its
         # [B, S, L] batch; per-request latent is therefore (seq, dim)
         engine = ChordsEngine(
@@ -137,10 +162,13 @@ def main():
         min_slots=args.min_slots, max_slots=args.max_slots,
         resize_hysteresis=args.resize_hysteresis, overlap=args.overlap,
         use_kernel=args.use_kernels or None,
+        lane_profile=True if args.lane_mode else None,
+        lane_skip_tau=args.lane_skip_tau,
         tracer=Tracer() if args.trace_out else None)
     for i in range(args.requests):
         engine.submit(Request(rid=i, key=jax.random.PRNGKey(100 + i),
-                              deadline_rounds=args.deadline_rounds))
+                              deadline_rounds=args.deadline_rounds,
+                              mode=args.lane_mode or "exact"))
     done = engine.run_until_drained(
         max_rounds_on_device=args.device_rounds)
     for rid, out in done:

@@ -212,7 +212,12 @@ def check(doc: dict, max_gap_s: float = 0.25,
     4. rollback bounds: rollbacks <= speculations, wasted dispatched
        rounds <= rollbacks (PR 7's "at most the one in-flight round per
        misprediction"), and — when ``max_rollbacks`` is given — an
-       absolute cap (CI's deterministic rtol=0 traces use 0).
+       absolute cap (CI's deterministic rtol=0 traces use 0);
+    5. lane-commit: heterogeneous-lane instants (``lane/skip``,
+       ``lane/promote``) are emitted ONLY at the drain commit point —
+       each (name, rid) appears at most once, and every rid they name
+       must belong to a completed ``request/compute`` span (a rolled-back
+       speculative step must never leave phantom lane events).
     """
     lines: List[str] = []
     ok = True
@@ -268,4 +273,30 @@ def check(doc: dict, max_gap_s: float = 0.25,
         if max_rollbacks is not None:
             result("rollback-cap", rb <= max_rollbacks,
                    f"{rb:.0f} rollbacks (cap {max_rollbacks})")
+
+    lane_ev = [e for e in _instants(doc)
+               if e["name"].startswith("lane/")]
+    if not lane_ev:
+        result("lane-commit", None, "no lane instants in trace")
+    else:
+        problems = []
+        seen = collections.Counter(
+            (e["name"], e.get("args", {}).get("rid")) for e in lane_ev)
+        dupes = [k for k, n in seen.items() if n > 1]
+        if dupes:
+            problems.append(f"duplicate lane instants {sorted(dupes)[:3]}")
+        # commit-point contract: a lane instant's rid must have a finished
+        # residency span (request/compute carrying rounds_used) — lane
+        # events for requests that never drained are phantoms from a
+        # speculative step that should have been rolled back silently
+        finished = {e.get("args", {}).get("rid") for e in _spans(doc)
+                    if e["name"] == "request/compute"
+                    and "rounds_used" in e.get("args", {})}
+        orphans = sorted({e.get("args", {}).get("rid") for e in lane_ev}
+                         - finished)
+        if orphans:
+            problems.append(f"lane instants for undrained rids {orphans[:5]}")
+        result("lane-commit", not problems,
+               f"{len(lane_ev)} lane instants, all at drain commits"
+               if not problems else "; ".join(problems))
     return ok, lines

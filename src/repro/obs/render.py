@@ -29,6 +29,8 @@ GROUPS: Sequence[Tuple[str, Sequence[str]]] = (
                  "resizes", "grows", "shrinks", "resize_vetoes",
                  "migrations", "buckets_visited", "retraces",
                  "migration_traces")),
+    ("lanes", ("lane_modes_enabled", "lane_profile", "lane_skips",
+               "lane_served_nonexact", "lane_promotes", "lane_skip_rate")),
 )
 
 

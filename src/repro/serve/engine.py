@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.chords import default_lane_profile
 from repro.core.init_sequence import make_sequence
 from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.serve.executor import (GridSpec, RoundExecutor, SlotState,
@@ -169,6 +170,11 @@ class Request:
     deadline_rounds: Optional[int] = None  # SLA: finish within this many
     # lockstep rounds of submission (None = best-effort, never counted as a
     # miss); scheduling policies order/admit/preempt against it
+    mode: str = "exact"  # lane mode the request OPTS INTO: "exact" (default,
+    # bitwise-identical to the homogeneous engine), "adaptive" (stability-
+    # gated step skipping), or "draft" (skipping + coarse draft lanes).
+    # Honored only when the engine was built with a lane_profile; the policy
+    # may still upgrade a non-exact request to exact when its deadline allows
 
 
 class ChordsEngine:
@@ -304,6 +310,18 @@ class ContinuousEngine:
     (slots shard over it under ``use_sharding``) and K× the per-slot latent
     to what one shard's HBM holds — see serve/README.md.
 
+    **Heterogeneous lanes** (``lane_profile=...``): the K cores of every
+    slot become asymmetric — trailing cores take a *draft* role (drift
+    evaluated through a coarse down/up-sample pair) and/or a per-core
+    stability-gated *step-skip* eligibility (see
+    ``core.chords.LaneSpec`` / ``default_lane_profile``). Requests opt in
+    per-request via ``Request.mode`` ("exact" | "adaptive" | "draft");
+    the cost model prices each mode from its observed skip rate and the
+    policy may upgrade a non-exact request to exact when its deadline
+    allows. ``mode="exact"`` lanes zero every gate, so their outputs are
+    bitwise-identical to the homogeneous engine; ``lane_profile=None``
+    (the default) compiles the exact same programs as before.
+
     **Async overlap** (``overlap=True``): ``step()`` becomes the
     double-buffered dispatch loop described in the module docstring — the
     host never blocks on a round it has not already replaced with the next
@@ -323,6 +341,8 @@ class ContinuousEngine:
                  max_slots: Optional[int] = None,
                  resize_hysteresis: int = 8,
                  overlap: bool = False,
+                 lane_profile=None,
+                 lane_skip_tau: float = 0.4,
                  executor: Optional[RoundExecutor] = None,
                  use_kernel: Optional[bool] = None,
                  tracer: Optional[Tracer] = None,
@@ -332,6 +352,15 @@ class ContinuousEngine:
         self.k = num_cores
         self.rtol = rtol
         self.priority_speedup = priority_speedup
+        # heterogeneous lanes: a lane_profile makes the K cores asymmetric
+        # (draft vs refine roles, per-core skip eligibility — see
+        # core.chords.LaneSpec). "default"/True resolves the standard
+        # profile for K; None keeps the homogeneous engine (every request
+        # runs exact, Request.mode is ignored, programs/jaxprs unchanged)
+        if lane_profile is True or lane_profile == "default":
+            lane_profile = default_lane_profile(num_cores)
+        self.lane_profile = tuple(lane_profile) if lane_profile else None
+        self.lane_skip_tau = float(lane_skip_tau)
         # observability: NULL_TRACER is a zero-allocation no-op, so the
         # un-traced engine stays bitwise-identical to pre-obs behavior;
         # the metrics registry is the single source of truth behind stats()
@@ -391,6 +420,10 @@ class ContinuousEngine:
         self._c_spec_wasted = m.counter("serve.spec.rounds_wasted")
         self._c_drain_lag = m.counter("serve.drain_lag_rounds")
         self._c_dispatches = m.counter("serve.dispatches")
+        # heterogeneous-lane accounting (all zero on a homogeneous grid)
+        self._c_lane_skips = m.counter("serve.lanes.skips")
+        self._c_lane_nonexact = m.counter("serve.lanes.served_nonexact")
+        self._c_lane_promotes = m.counter("serve.lanes.promotes")
         # bounded reservoirs replace the previously unbounded _latencies /
         # _speedups lists: count/sum/min/max stay exact forever, percentiles
         # are exact up to the reservoir capacity and an unbiased uniform-
@@ -420,7 +453,8 @@ class ContinuousEngine:
         return GridSpec(num_slots=s, num_cores=self.k,
                         latent_shape=self.latent_shape,
                         sharding=ambient_sharding_tag(),
-                        donate=True)
+                        donate=True,
+                        lane_profile=self.lane_profile)
 
     def _install_grid(self, s: int):
         """Fresh grid at capacity ``s`` (construction / empty resize)."""
@@ -438,10 +472,21 @@ class ContinuousEngine:
         # wall clock of each lane's committed admission — the start of its
         # request/compute span on the per-slot trace track
         self._admit_wall: List[float] = [0.0] * s
+        # lane mode each slot's resident request runs under (meaningful
+        # only while the slot is occupied; admissions overwrite it)
+        self._slot_mode: List[str] = ["exact"] * s
         self.metrics.gauge("serve.slots").set(float(s))
         if self.tracer.enabled:
+            suffix = ""
+            if self.lane_profile is not None:
+                # role-suffixed labels: D=draft, A=skip-only, R=refine —
+                # same letters enumerate_programs tags hetero grids with
+                roles = "".join(
+                    "D" if sp.role == "draft" else
+                    ("A" if sp.skip else "R") for sp in self.lane_profile)
+                suffix = f" [{roles}]"
             for i in range(s):
-                self.tracer.label_track(("slots", i), f"slot {i}")
+                self.tracer.label_track(("slots", i), f"slot {i}{suffix}")
 
     def _resize_to(self, new_s: int):
         """Move the grid to capacity ``new_s``, migrating live lanes.
@@ -456,7 +501,8 @@ class ContinuousEngine:
         assert len(occupied) <= new_s, (occupied, new_s)
         old_s, old_spec, old_state = self.s, self.spec, self.state
         old = (self._slot_item, self._slot_iseq, self._slot_rtol,
-               self._admit_round, self._pred_done, self._admit_wall)
+               self._admit_round, self._pred_done, self._admit_wall,
+               self._slot_mode)
         t_mig = self.tracer.now()
         self._install_grid(new_s)
         if occupied:
@@ -469,6 +515,7 @@ class ContinuousEngine:
                 self._slot_rtol[dst] = old[2][s_old]
                 self._admit_round[dst] = old[3][s_old]
                 self._pred_done[dst] = old[4][s_old]
+                self._slot_mode[dst] = old[6][s_old]
                 self.migrated_rids.add(old[0][s_old].payload.rid)
                 # a migration ends the lane's residency on the old slot
                 # track and opens a new one on the destination — per-slot
@@ -526,7 +573,8 @@ class ContinuousEngine:
                           free_slots=[i for i, it in
                                       enumerate(self._slot_item)
                                       if it is None],
-                          lanes=self._lane_views(), cost=self.cost)
+                          lanes=self._lane_views(), cost=self.cost,
+                          lane_modes=self.lane_profile is not None)
         if self.policy.consider_resize(view, proposal) is None:
             self._c_vetoes.inc()
             self.tracer.instant("resize/veto", round_idx=self.round_count,
@@ -582,7 +630,8 @@ class ContinuousEngine:
             lanes.append(LaneView(
                 slot=slot, item=item, rounds_done=done_r,
                 est_remaining=self.cost.remaining_rounds(
-                    self._slot_iseq[slot], done_r, item.rtol),
+                    self._slot_iseq[slot], done_r, item.rtol,
+                    mode=self._slot_mode[slot]),
                 invested=done_r + item.rounds_credit))
         return lanes
 
@@ -611,7 +660,8 @@ class ContinuousEngine:
                 undo.prior[slot] = (
                     self._slot_item[slot], self._slot_iseq[slot],
                     float(self._slot_rtol[slot]), self._admit_round[slot],
-                    self._pred_done[slot], self._admit_wall[slot])
+                    self._pred_done[slot], self._admit_wall[slot],
+                    self._slot_mode[slot])
         for slot in dec.evictions:
             item = self._slot_item[slot]
             ran = now - self._admit_round[slot]
@@ -635,6 +685,7 @@ class ContinuousEngine:
         mask = np.zeros(self.s, bool)
         i_arr = np.zeros((self.s, self.k), np.int32)
         wall = self.tracer.now()
+        hetero = self.lane_profile is not None
         for a in dec.admissions:
             mask[a.slot] = True
             i_arr[a.slot] = a.i_seq
@@ -643,8 +694,13 @@ class ContinuousEngine:
             self._slot_iseq[a.slot] = list(a.i_seq)
             self._admit_round[a.slot] = now
             self._admit_wall[a.slot] = wall
+            # the effective mode is the policy's Admission.mode, but only a
+            # lane-profile engine can honor it — a homogeneous grid has no
+            # draft/skip machinery, so everything runs (and is priced) exact
+            mode = a.mode if hetero else "exact"
+            self._slot_mode[a.slot] = mode
             self._pred_done[a.slot] = self.cost.predict_done_round(
-                a.i_seq, a.item.rtol, now)
+                a.i_seq, a.item.rtol, now, mode=mode)
             if record_undo:
                 undo.admissions.append((a.slot, a.item))
             else:
@@ -654,9 +710,27 @@ class ContinuousEngine:
                             for a in dec.admissions]).astype(jnp.uint32)
         keys = jnp.zeros((self.s, 2), jnp.uint32).at[idx].set(kstack)
         t0 = self.tracer.now()
-        self.state = self._prog.admit(self.state, jnp.asarray(mask), keys,
-                                      jnp.asarray(i_arr),
-                                      jnp.asarray(self._slot_rtol))
+        if hetero:
+            # per-slot lane gates derived from the admitted mode: draft
+            # lanes smooth only in "draft"; skipping arms in both non-exact
+            # modes. An "exact" admission zeroes both gates, which makes
+            # every lane-masked select pick the exact operand bitwise.
+            draft_on = np.zeros((self.s,), bool)
+            skip_tau = np.zeros((self.s,), np.float32)
+            for a in dec.admissions:
+                m_eff = self._slot_mode[a.slot]
+                draft_on[a.slot] = m_eff == "draft"
+                skip_tau[a.slot] = (self.lane_skip_tau
+                                    if m_eff in ("draft", "adaptive")
+                                    else 0.0)
+            self.state = self._prog.admit(
+                self.state, jnp.asarray(mask), keys, jnp.asarray(i_arr),
+                jnp.asarray(self._slot_rtol), jnp.asarray(draft_on),
+                jnp.asarray(skip_tau))
+        else:
+            self.state = self._prog.admit(self.state, jnp.asarray(mask),
+                                          keys, jnp.asarray(i_arr),
+                                          jnp.asarray(self._slot_rtol))
         self.tracer.span("dispatch/admit", t0, round_idx=now,
                          lanes=len(dec.admissions))
         return undo
@@ -728,7 +802,7 @@ class ContinuousEngine:
         for slot, prior in undo.prior.items():
             (self._slot_item[slot], self._slot_iseq[slot], rtol,
              self._admit_round[slot], self._pred_done[slot],
-             self._admit_wall[slot]) = prior
+             self._admit_wall[slot], self._slot_mode[slot]) = prior
             self._slot_rtol[slot] = rtol
 
     def _amortizable(self) -> bool:
@@ -817,12 +891,18 @@ class ContinuousEngine:
 
     def _finish_lane(self, item: QueueItem, i_seq, ru: int, chosen_k: int,
                      sample, acc_round: int, slot: int = -1,
-                     admit_wall: float = 0.0) -> tuple[int, SampleOut]:
+                     admit_wall: float = 0.0, mode: str = "exact",
+                     skips: int = 0) -> tuple[int, SampleOut]:
         """Account one drained lane. ``acc_round`` is the absolute engine
         round at which the accept fired — equal to ``round_count`` at the
         drain in the synchronous engine, and ``admit_round + rounds_used``
         always (the async engine uses the latter so latency/deadline numbers
-        are identical no matter when the host *discovers* the accept)."""
+        are identical no matter when the host *discovers* the accept).
+
+        This drain commit is the ONLY place lane-mode trace instants
+        (``lane/skip``, ``lane/promote``) are emitted — a rolled-back
+        speculative step can therefore never leave phantom lane events
+        (machine-checked by the obs 'lane-commit' pass)."""
         # queue wait is measured from SUBMIT time — eviction/re-admission
         # cycles and queue reordering all land in the same number
         latency = acc_round - item.submit_round
@@ -837,8 +917,17 @@ class ContinuousEngine:
                         latency_rounds=latency)
         # item.rtol (not the float32 device mirror) so the table key
         # matches the one predictions are queried with
-        self.cost.observe_accept(i_seq, item.rtol, ru)
+        self.cost.observe_accept(i_seq, item.rtol, ru, mode=mode)
+        self.cost.observe_skips(mode, skips, ru)
         self._c_served.inc()
+        self._c_lane_skips.inc(skips)
+        promoted = (self.lane_profile is not None
+                    and 0 <= chosen_k < len(self.lane_profile)
+                    and self.lane_profile[chosen_k].role == "draft")
+        if mode != "exact":
+            self._c_lane_nonexact.inc()
+        if promoted:
+            self._c_lane_promotes.inc()
         self._h_latency.observe(latency)
         self._h_speedup.observe(res.speedup)
         if self.tracer.enabled:
@@ -847,6 +936,14 @@ class ContinuousEngine:
                              round_idx=acc_round, track=("slots", slot),
                              rid=rid, rounds_used=ru, core=chosen_k,
                              latency_rounds=latency)
+            if skips > 0:
+                self.tracer.instant("lane/skip", round_idx=acc_round,
+                                    track=("slots", slot), rid=rid,
+                                    count=skips, mode=mode)
+            if promoted:
+                self.tracer.instant("lane/promote", round_idx=acc_round,
+                                    track=("slots", slot), rid=rid,
+                                    core=chosen_k, mode=mode)
             if missed:
                 self.tracer.instant("deadline/miss", round_idx=acc_round,
                                     rid=rid, slot=slot,
@@ -877,7 +974,8 @@ class ContinuousEngine:
         if len(self.queue) and (free or self.policy.preemptive):
             view = EngineView(now=self.round_count, queue=self.queue,
                               free_slots=free, lanes=self._lane_views(),
-                              cost=self.cost)
+                              cost=self.cost,
+                              lane_modes=self.lane_profile is not None)
             self._apply_decision(self.policy.decide(view))
         if not self.has_inflight:
             # a fully idle grid is the lowest occupancy there is: idle
@@ -921,15 +1019,26 @@ class ContinuousEngine:
                  if self._slot_item[slot] is not None and done[slot]]
         # one gather + one transfer for the whole drain set — a per-slot
         # device_get here was an extra host sync per finished request
-        # (caught by the repro.analysis triage)
-        results = jax.device_get(
-            self.state.result[np.asarray(drain)]) if drain else []
+        # (caught by the repro.analysis triage); the lane skip counters
+        # ride the same transfer on a heterogeneous grid
+        results, drain_skips = [], None
+        if drain:
+            d_idx = np.asarray(drain)
+            if self.lane_profile is not None:
+                results, drain_skips = jax.device_get(
+                    (self.state.result[d_idx],
+                     self.state.lanes.skips[d_idx]))
+            else:
+                results = jax.device_get(self.state.result[d_idx])
         for j, slot in enumerate(drain):
             item = self._slot_item[slot]
             out.append(self._finish_lane(
                 item, self._slot_iseq[slot], int(rounds_used[slot]),
                 int(chosen[slot]), results[j], acc_round=self.round_count,
-                slot=slot, admit_wall=self._admit_wall[slot]))
+                slot=slot, admit_wall=self._admit_wall[slot],
+                mode=self._slot_mode[slot],
+                skips=int(drain_skips[j].sum())
+                if drain_skips is not None else 0))
             self._slot_item[slot] = None  # slot is free; done flag stays
             self._pred_done[slot] = None  # until the next admission clears
             # it (the lane is frozen)
@@ -1017,7 +1126,8 @@ class ContinuousEngine:
         # drain metadata BEFORE the decision may overwrite it (a confirmed
         # speculative admit re-targets the due slot in the same step)
         due_meta = {s: (self._slot_item[s], self._slot_iseq[s],
-                        self._admit_round[s], self._admit_wall[s])
+                        self._admit_round[s], self._admit_wall[s],
+                        self._slot_mode[s])
                     for s in due}
         dec, undo, spec_admits = Decision(), None, []
         if want_decide:
@@ -1029,7 +1139,8 @@ class ContinuousEngine:
                 free_slots=sorted(free + due),
                 lanes=[ln for ln in self._lane_views()
                        if ln.slot not in due_meta],
-                cost=self.cost, speculative=need_verify)
+                cost=self.cost, speculative=need_verify,
+                lane_modes=self.lane_profile is not None)
             dec = self.policy.decide(view)
             spec_admits = [a.slot for a in dec.admissions
                            if a.slot in due_meta]
@@ -1057,9 +1168,17 @@ class ContinuousEngine:
             # ONE blocking readback per event step — the flags (and the due
             # results) of the round that finished while we were speculating
             t0 = self.tracer.now()
-            done, rounds_used, chosen, due_res = jax.device_get(
-                (prev.done, prev.rounds_used, prev.chosen,
-                 prev.result[np.asarray(due, np.int32)]))
+            due_idx = np.asarray(due, np.int32)
+            if self.lane_profile is not None:
+                done, rounds_used, chosen, due_res, due_skips = \
+                    jax.device_get(
+                        (prev.done, prev.rounds_used, prev.chosen,
+                         prev.result[due_idx], prev.lanes.skips[due_idx]))
+            else:
+                done, rounds_used, chosen, due_res = jax.device_get(
+                    (prev.done, prev.rounds_used, prev.chosen,
+                     prev.result[due_idx]))
+                due_skips = None
             self.tracer.span("verify/readback", t0, round_idx=now,
                              due=len(due))
             self._c_host_syncs.inc()
@@ -1077,7 +1196,7 @@ class ContinuousEngine:
                 self.state = prev
                 self._undo_decision(undo)
                 out += self._drain_due(due, due_meta, done, rounds_used,
-                                       chosen, due_res)
+                                       chosen, due_res, due_skips)
                 for s in due:
                     if not done[s] and self._slot_item[s] is not None:
                         self._pred_done[s] = now + 1  # re-verify next step
@@ -1087,7 +1206,9 @@ class ContinuousEngine:
                     view = EngineView(now=now, queue=self.queue,
                                       free_slots=free2,
                                       lanes=self._lane_views(),
-                                      cost=self.cost)
+                                      cost=self.cost,
+                                      lane_modes=self.lane_profile
+                                      is not None)
                     self._apply_decision(self.policy.decide(view), now=now)
                 if any(it is not None for it in self._slot_item):
                     self._mark_dispatch("round", live=sum(
@@ -1102,7 +1223,7 @@ class ContinuousEngine:
                                         slots=list(spec_admits))
                 adm_slots = {a.slot for a in dec.admissions}
                 out += self._drain_due(due, due_meta, done, rounds_used,
-                                       chosen, due_res)
+                                       chosen, due_res, due_skips)
                 # lifecycle events of the now-confirmed speculative decision
                 # — emitted after the due drains so the replaced residents'
                 # spans close before the new residents' open
@@ -1133,22 +1254,26 @@ class ContinuousEngine:
             self._last_dispatch_done = None
         return out
 
-    def _drain_due(self, due, due_meta, done, rounds_used, chosen, due_res
-                   ) -> list[tuple[int, SampleOut]]:
+    def _drain_due(self, due, due_meta, done, rounds_used, chosen, due_res,
+                   due_skips=None) -> list[tuple[int, SampleOut]]:
         """Drain the due lanes whose accept actually fired, from the
         retained pre-round arrays. A slot whose speculative re-admission was
         confirmed already carries its NEW item in the mirrors — the old
-        lane's identity comes from ``due_meta`` and the slot is not freed."""
+        lane's identity (and lane mode) comes from ``due_meta`` and the
+        slot is not freed."""
         out = []
         for j, s in enumerate(due):
-            item, i_seq, admit_round, admit_wall = due_meta[s]
+            item, i_seq, admit_round, admit_wall, mode = due_meta[s]
             if not done[s]:
                 continue
             ru = int(rounds_used[s])
             out.append(self._finish_lane(item, i_seq, ru, int(chosen[s]),
                                          due_res[j],
                                          acc_round=admit_round + ru,
-                                         slot=s, admit_wall=admit_wall))
+                                         slot=s, admit_wall=admit_wall,
+                                         mode=mode,
+                                         skips=int(due_skips[j].sum())
+                                         if due_skips is not None else 0))
             if self._slot_item[s] is item:
                 self._slot_item[s] = None  # freed; stale flags stay until
                 self._pred_done[s] = None  # the next admission (frozen lane)
@@ -1235,6 +1360,16 @@ class ContinuousEngine:
             "buckets_visited": sorted(self._buckets_visited),
             "retraces": self.executor.retraces,
             "migration_traces": self.executor.migration_traces,
+            # heterogeneous-lane accounting (all zero / disabled on a
+            # homogeneous grid — lane_profile=None)
+            "lane_modes_enabled": self.lane_profile is not None,
+            "lane_profile": [sp.role + ("+skip" if sp.skip else "")
+                             for sp in (self.lane_profile or ())],
+            "lane_skips": int(self._c_lane_skips.value),
+            "lane_served_nonexact": int(self._c_lane_nonexact.value),
+            "lane_promotes": int(self._c_lane_promotes.value),
+            "lane_skip_rate": {m: self.cost.skip_rate(m)
+                               for m in ("adaptive", "draft")},
             # which solver-step implementation served this engine's rounds
             # (fused-accept-pallas | fused-accept-oracle | jnp-unfused)
             "kernel_path": self.executor.kernel_path,
@@ -1250,7 +1385,8 @@ class ContinuousEngine:
         from repro.obs import write_chrome_trace
         self.stats()  # refresh the snapshot gauges
         info = {"engine": "continuous", "policy": self.policy.name,
-                "overlap": self.overlap, "n_steps": self.n, "k": self.k}
+                "overlap": self.overlap, "n_steps": self.n, "k": self.k,
+                "lane_modes": self.lane_profile is not None}
         if meta:
             info.update(meta)
         return write_chrome_trace(path, self.tracer, metrics=self.metrics,

@@ -41,9 +41,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import scheduler
-from repro.core.chords import (ChordsCarry, accept_from_sums, accept_test,
-                               bmask, chords_init_carry, gather_slots,
-                               make_round_body, make_slot_round_body,
+from repro.core.chords import (ChordsCarry, LaneSpec, LaneState,
+                               accept_from_sums, accept_test, bmask,
+                               chords_init_carry, gather_slots,
+                               lane_init_state, make_round_body,
+                               make_slot_round_body, reset_lanes,
                                reset_slots, slot_init_carry)
 from repro.obs import NULL_TRACER, MetricsRegistry
 
@@ -92,6 +94,13 @@ class GridSpec:
     is the rollback anchor and ``round_keep`` exists precisely so the async
     engine can keep the pre-round state readable while the next round is in
     flight.
+
+    ``lane_profile`` (a tuple of :class:`repro.core.chords.LaneSpec`, or
+    ``None``) selects the heterogeneous round body: the grid's
+    :class:`SlotState` gains a ``LaneState`` and the admit program two
+    per-slot gate operands (``draft_on``/``skip_tau``). ``None`` builds
+    exactly the homogeneous programs — the profile is part of the cache key,
+    so homogeneous and heterogeneous grids of the same shape never alias.
     """
 
     num_slots: int
@@ -101,9 +110,13 @@ class GridSpec:
     sharding: Optional[str] = None
     device_rounds: Optional[int] = None
     donate: bool = False
+    lane_profile: Optional[Tuple[LaneSpec, ...]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "latent_shape", tuple(self.latent_shape))
+        if self.lane_profile is not None:
+            object.__setattr__(self, "lane_profile",
+                               tuple(self.lane_profile))
         if self.num_slots < 1 or self.num_cores < 1:
             raise ValueError(f"need S >= 1 and K >= 1, got {self}")
 
@@ -140,6 +153,10 @@ class SlotState(NamedTuple):
     result: jax.Array      # [S, ...] accepted output (valid where done)
     rounds_used: jax.Array  # [S] lockstep rounds at accept
     chosen: jax.Array      # [S] accepted core index
+    # LaneState on heterogeneous grids; () on homogeneous ones — the empty
+    # tuple has zero pytree leaves, so homogeneous programs (and their
+    # jaxprs) are untouched by the field existing
+    lanes: object = ()
 
 
 class GridPrograms(NamedTuple):
@@ -178,6 +195,13 @@ def _slot_state_structs(spec: GridSpec) -> SlotState:
     sk_i32 = jax.ShapeDtypeStruct((s, k), jnp.int32)
     s_i32 = jax.ShapeDtypeStruct((s,), jnp.int32)
     s_bool = jax.ShapeDtypeStruct((s,), jnp.bool_)
+    sk_f32 = jax.ShapeDtypeStruct((s, k), jnp.float32)
+    lanes: object = ()
+    if spec.lane_profile is not None:
+        lanes = LaneState(
+            pos=sk_i32, f_norm=sk_f32, stab=sk_f32, skips=sk_i32,
+            draft_on=s_bool,
+            skip_tau=jax.ShapeDtypeStruct((s,), jnp.float32))
     return SlotState(
         carry=ChordsCarry(x=grid_lat, x_snap=grid_lat, f_snap=grid_lat,
                           p=sk_i32, finals=grid_lat),
@@ -185,7 +209,7 @@ def _slot_state_structs(spec: GridSpec) -> SlotState:
         rtol=jax.ShapeDtypeStruct((s,), jnp.float32),
         rounds=s_i32, live=s_bool, done=s_bool, has_last=s_bool,
         last_out=lat, result=lat,
-        rounds_used=s_i32, chosen=s_i32,
+        rounds_used=s_i32, chosen=s_i32, lanes=lanes,
     )
 
 
@@ -206,10 +230,12 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
     # use_kernel=False keeps the composed-jnp round with accept_test on the
     # materialized output; both paths are bitwise identical on CPU.
     fuse_accept = bool(use_kernel)
+    hetero = spec.lane_profile is not None
     slot_round = make_slot_round_body(drift, tgrid, n, k,
                                       use_kernel=use_kernel,
                                       kernel_interpret=kernel_interpret,
-                                      fuse_accept=fuse_accept)
+                                      fuse_accept=fuse_accept,
+                                      lane_profile=spec.lane_profile)
 
     def round_fn(st: SlotState) -> SlotState:
         """One lockstep round for every live slot + per-slot accept test."""
@@ -218,7 +244,14 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
         # cores that wrote t=1 this round; recomputing it from the
         # scheduler table here left the returned mask dead in the jaxpr
         # (caught by repro.analysis jaxpr:dead-code)
-        if fuse_accept:
+        lanes = st.lanes
+        if hetero and fuse_accept:
+            carry, lanes, hit, err_sq, out_sq = slot_round(
+                st.carry, st.lanes, st.i_arr, st.rounds, active, st.last_out)
+        elif hetero:
+            carry, lanes, hit = slot_round(st.carry, st.lanes, st.i_arr,
+                                           st.rounds, active)
+        elif fuse_accept:
             carry, hit, err_sq, out_sq = slot_round(
                 st.carry, st.i_arr, st.rounds, active, st.last_out)
         else:
@@ -255,9 +288,10 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
             result=result,
             rounds_used=jnp.where(acc, r, st.rounds_used),
             chosen=jnp.where(acc, ek, st.chosen),
+            lanes=lanes,
         )
 
-    def admit_fn(st: SlotState, mask, keys, i_arr, rtol) -> SlotState:
+    def _admit_common(st: SlotState, mask, keys, i_arr, rtol) -> SlotState:
         """Masked admission: reset lanes + per-slot accept state in place.
 
         ``keys`` is ``uint32[S, 2]`` — one PRNG key row per slot (unadmitted
@@ -283,7 +317,20 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
             result=jnp.where(m_lat, 0.0, st.result),
             rounds_used=jnp.where(mask, 0, st.rounds_used),
             chosen=jnp.where(mask, 0, st.chosen),
+            lanes=st.lanes,
         )
+
+    if hetero:
+        def admit_fn(st: SlotState, mask, keys, i_arr, rtol,
+                     draft_on, skip_tau) -> SlotState:
+            """Heterogeneous admission: ``_admit_common`` plus the admitted
+            request's lane gates (``draft_on``: [S] bool opting into draft
+            smoothing, ``skip_tau``: [S] f32 skip threshold, 0 = exact)."""
+            base = _admit_common(st, mask, keys, i_arr, rtol)
+            return base._replace(
+                lanes=reset_lanes(st.lanes, mask, draft_on, skip_tau))
+    else:
+        admit_fn = _admit_common
 
     def multi_fn(st: SlotState, max_rounds):
         """Up to ``max_rounds`` lockstep rounds in ONE device program.
@@ -350,6 +397,7 @@ def _grid_fns(drift, tgrid, n: int, spec: GridSpec,
             last_out=lat, result=lat,
             rounds_used=jnp.zeros((s,), jnp.int32),
             chosen=jnp.zeros((s,), jnp.int32),
+            lanes=lane_init_state(s, k) if hetero else (),
         )
 
     tag = f"serve.grid_s{s}k{k}"
@@ -541,7 +589,8 @@ class RoundExecutor:
         migrated lane's carry is copied bit-exactly)."""
         if src_spec.num_cores != dst_spec.num_cores \
                 or src_spec.latent_shape != dst_spec.latent_shape \
-                or src_spec.dtype != dst_spec.dtype:
+                or src_spec.dtype != dst_spec.dtype \
+                or src_spec.lane_profile != dst_spec.lane_profile:
             raise ValueError(
                 f"can only migrate lanes between grids differing in S: "
                 f"{src_spec} -> {dst_spec}")
@@ -566,8 +615,17 @@ class RoundExecutor:
                             self.use_kernel, self.kernel_interpret)
             st = _slot_state_structs(spec)
             s, k = spec.num_slots, spec.num_cores
+            lane_tag = ""
+            admit_extra: tuple = ()
+            if spec.lane_profile is not None:
+                roles = "".join("D" if sp.role == "draft" else
+                                ("A" if sp.skip else "R")
+                                for sp in spec.lane_profile)
+                lane_tag = f",lanes={roles}"
+                admit_extra = (jax.ShapeDtypeStruct((s,), jnp.bool_),
+                               jax.ShapeDtypeStruct((s,), jnp.float32))
             tag = (f"grid[S={s},K={k},{spec.latent_shape},"
-                   f"{jnp.dtype(spec.dtype).name}]")
+                   f"{jnp.dtype(spec.dtype).name}{lane_tag}]")
             records.append(ProgramRecord(
                 f"{tag}/round", "round", fns["round"], (st,)))
             records.append(ProgramRecord(
@@ -575,7 +633,7 @@ class RoundExecutor:
                 (st, jax.ShapeDtypeStruct((s,), jnp.bool_),
                  jax.ShapeDtypeStruct((s, 2), jnp.uint32),
                  jax.ShapeDtypeStruct((s, k), jnp.int32),
-                 jax.ShapeDtypeStruct((s,), jnp.float32))))
+                 jax.ShapeDtypeStruct((s,), jnp.float32)) + admit_extra))
             records.append(ProgramRecord(
                 f"{tag}/multi", "multi", fns["multi"],
                 (st, jax.ShapeDtypeStruct((), jnp.int32))))

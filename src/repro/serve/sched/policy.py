@@ -15,6 +15,16 @@ any policy by construction.
   and asks the cost model for the cheapest init sequence that still meets
   the item's remaining deadline budget (floored at the request's priority
   level so no-deadline requests behave exactly like FIFO's).
+
+**Lane modes** (heterogeneous grids): a request's ``mode`` ("exact" |
+"draft" | "adaptive") is an *opt-in permission* to serve it degraded, not a
+hard routing. FIFO serves the requested mode as-is. EDF treats a non-exact
+mode as headroom: a deadline-free request keeps its requested mode, and a
+deadlined one is served **exact whenever exact fits the budget** — the
+scheduler only *downgrades* to the request's opted mode when the deadline is
+tight (no ladder level meets the budget at exact pricing). On engines
+without a lane profile ``EngineView.lane_modes`` is False and every request
+prices — and runs — as exact.
 * ``EdfPreemptPolicy`` — EDF, plus: when the queue head would miss its
   deadline waiting for a natural drain but would meet it if admitted now,
   evict the lowest-value in-flight lane (max slack, then least progress;
@@ -87,6 +97,18 @@ class EngineView:
     lanes: List[LaneView]
     cost: CostModel
     speculative: bool = False
+    # True when the engine's grid carries a lane profile (heterogeneous
+    # modes actually executable); policies price non-exact modes only then
+    lane_modes: bool = False
+
+
+def request_mode(view: EngineView, item: QueueItem) -> str:
+    """The mode this item can be *served* at: the request's opted mode on a
+    lane-profiled engine, else "exact" (so pricing never assumes a skip
+    schedule the grid cannot execute)."""
+    if not view.lane_modes:
+        return "exact"
+    return getattr(item.payload, "mode", "exact") or "exact"
 
 
 @dataclasses.dataclass
@@ -96,6 +118,7 @@ class Admission:
     i_seq: List[int]
     predicted_rounds: int
     level: int
+    mode: str = "exact"
 
 
 @dataclasses.dataclass
@@ -148,11 +171,12 @@ class Policy:
 
     def _admission(self, view: EngineView, slot: int, item: QueueItem
                    ) -> Admission:
+        mode = request_mode(view, item)
         seq = view.cost.seq_for_level(item.priority)
         return Admission(slot=slot, item=item, i_seq=seq,
                          predicted_rounds=view.cost.predict_rounds(
-                             seq, item.rtol),
-                         level=max(0, item.priority))
+                             seq, item.rtol, mode),
+                         level=max(0, item.priority), mode=mode)
 
     def _pop(self, view: EngineView) -> Optional[QueueItem]:
         return view.queue.pop_fifo()
@@ -194,7 +218,8 @@ class EdfPolicy(Policy):
             if math.isinf(budget):
                 continue
             _, need, _ = view.cost.pick_i_seq(
-                budget, min_level=max(0, item.priority), rtol=item.rtol)
+                budget, min_level=max(0, item.priority), rtol=item.rtol,
+                mode=request_mode(view, item))
             if need + wait_now > budget:
                 continue  # missing either way: the shrink changes nothing
             if need + wait_after > budget:
@@ -207,10 +232,23 @@ class EdfPolicy(Policy):
     def _admission(self, view: EngineView, slot: int, item: QueueItem
                    ) -> Admission:
         budget = item.deadline_round - view.now
+        mode = request_mode(view, item)
+        if mode != "exact" and math.isfinite(budget):
+            # a non-exact mode is permission, not a mandate: serve exact
+            # when exact still meets the deadline; downgrade to the opted
+            # mode only when the deadline is tight
+            seq, pred, level = view.cost.pick_i_seq(
+                budget, min_level=max(0, item.priority), rtol=item.rtol,
+                mode="exact")
+            if pred <= budget:
+                return Admission(slot=slot, item=item, i_seq=seq,
+                                 predicted_rounds=pred, level=level,
+                                 mode="exact")
         seq, pred, level = view.cost.pick_i_seq(
-            budget, min_level=max(0, item.priority), rtol=item.rtol)
+            budget, min_level=max(0, item.priority), rtol=item.rtol,
+            mode=mode)
         return Admission(slot=slot, item=item, i_seq=seq,
-                         predicted_rounds=pred, level=level)
+                         predicted_rounds=pred, level=level, mode=mode)
 
 
 class EdfPreemptPolicy(EdfPolicy):
@@ -252,8 +290,12 @@ class EdfPreemptPolicy(EdfPolicy):
             budget = head.deadline_round - view.now
             if math.isinf(budget):
                 break  # head (and thus everything behind it) can wait
+            # preemption is by definition the tight case: price the head at
+            # its opted (possibly downgraded) mode directly
+            head_mode = request_mode(view, head)
             seq, need, level = view.cost.pick_i_seq(
-                budget, min_level=max(0, head.priority), rtol=head.rtol)
+                budget, min_level=max(0, head.priority), rtol=head.rtol,
+                mode=head_mode)
             wait = view.cost.wait_rounds(0, remaining)
             if need > budget:
                 break   # hopeless even if admitted now: don't waste a lane
@@ -267,7 +309,7 @@ class EdfPreemptPolicy(EdfPolicy):
             dec.evictions.append(victim.slot)
             dec.admissions.append(Admission(
                 slot=victim.slot, item=head, i_seq=seq,
-                predicted_rounds=need, level=level))
+                predicted_rounds=need, level=level, mode=head_mode))
             taken.append(victim.slot)
             remaining = [ln.est_remaining for ln in view.lanes
                          if ln.slot not in taken]
